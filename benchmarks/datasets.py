@@ -1,0 +1,83 @@
+"""Benchmark dataset registry - synthetic twins of the paper's collections.
+
+Sizes are scaled to the CPU container (the paper used 200K-2M points on a
+laptop for hours; we default to 8-16K points / 100-200 queries and note the
+scaling in EXPERIMENTS.md).  ``--full`` raises the sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.distances import get_distance
+from repro.data.synthetic import (
+    lda_like_histograms,
+    random_histograms,
+    split_queries,
+    text_collection,
+)
+
+# the paper's headline (data set x distance) combinations (SS3, Figs 1-2)
+COMBOS = [
+    # (dataset, dim, distance)     low-dimensional group (Fig 1)
+    ("wiki", 8, "kl"),
+    ("wiki", 8, "itakura_saito"),
+    ("wiki", 8, "renyi_0.25"),
+    ("wiki", 8, "renyi_2"),
+    ("randhist", 8, "kl"),
+    ("randhist", 8, "itakura_saito"),
+    # high-dimensional group (Fig 2)
+    ("wiki", 128, "kl"),
+    ("wiki", 128, "itakura_saito"),
+    ("wiki", 128, "renyi_0.25"),
+    ("wiki", 128, "renyi_2"),
+    ("rcv", 128, "kl"),
+    ("rcv", 128, "itakura_saito"),
+    ("rcv", 128, "renyi_0.25"),
+    ("rcv", 128, "renyi_2"),
+    ("randhist", 32, "kl"),
+    ("randhist", 32, "itakura_saito"),
+    ("randhist", 32, "renyi_0.25"),
+    ("randhist", 32, "renyi_2"),
+    ("manner", 2048, "bm25"),
+]
+
+TABLE3_ROWS = [
+    ("wiki", 8, "itakura_saito"),
+    ("wiki", 8, "kl"),
+    ("wiki", 8, "renyi_0.25"),
+    ("wiki", 8, "renyi_2"),
+    ("rcv", 128, "itakura_saito"),
+    ("rcv", 128, "kl"),
+    ("rcv", 128, "renyi_0.25"),
+    ("rcv", 128, "renyi_2"),
+    ("wiki", 128, "itakura_saito"),
+    ("wiki", 128, "kl"),
+    ("wiki", 128, "renyi_0.25"),
+    ("wiki", 128, "renyi_2"),
+    ("randhist", 32, "itakura_saito"),
+    ("randhist", 32, "kl"),
+    ("randhist", 32, "renyi_0.25"),
+    ("randhist", 32, "renyi_2"),
+    ("manner", 2048, "bm25"),
+]
+
+
+def load(name: str, dim: int, n_db: int, n_q: int, seed: int = 0):
+    """Returns (Q_raw, X_raw, make_distance, natural_or_None)."""
+    key = jax.random.PRNGKey(hash((name, dim, seed)) % 2**31)
+    if name == "manner":
+        tc = text_collection(jax.random.fold_in(key, 1), n=n_db + n_q,
+                             vocab=dim, mean_len=60)
+        Q, X = split_queries(tc.counts, n_q, jax.random.fold_in(key, 2))
+        return Q, X, tc.bm25(), tc.natural
+    if name == "randhist":
+        data = random_histograms(jax.random.fold_in(key, 1), n_db + n_q, dim)
+    else:  # wiki / rcv: LDA-like topic histograms
+        data = lda_like_histograms(jax.random.fold_in(key, 1), n_db + n_q, dim)
+    Q, X = split_queries(data, n_q, jax.random.fold_in(key, 2))
+    return Q, X, None, None
+
+
+def distance_for(name: str, dist_name: str, maybe_viewed):
+    return maybe_viewed if maybe_viewed is not None else get_distance(dist_name)

@@ -1,0 +1,114 @@
+"""Reproduce Figs 1-2: efficiency/effectiveness frontiers of SW-graph with
+index- and query-time symmetrization.
+
+For each (dataset x distance) combo and each symmetrization variant
+(a-b markers, exactly the paper's):
+
+    none-none, avg-none, min-none, reverse-none, l2-none,
+    natural-none (BM25 only), and full symmetrization best-of {min-min,
+    avg-avg} re-ranked under the original distance,
+
+sweep efSearch = 2^j and record Recall@10 vs (a) distance-evaluation
+reduction (hardware-independent; the paper's speedup tracks it) and
+(b) wall-clock speedup over brute force on this backend.
+
+Paper claims validated here (EXPERIMENTS.md SSRepro-Fig1-2):
+  * none-none reaches >=90% recall with >3x eval reduction on all combos,
+  * full symmetrization is never the best frontier,
+  * reverse/l2 index-time variants sometimes help, sometimes hurt badly
+    (Itakura-Saito), mirroring Panels 2a/2b/2k vs 1b/2f.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ANNIndex, get_distance, knn_scan, recall_at_k
+from repro.core.metrics import speedup_model
+
+from .datasets import COMBOS, load
+
+K = 10
+EFS = [16, 32, 64, 128, 256, 512]
+
+
+def _bruteforce_time(dist, Q, X):
+    t0 = time.time()
+    d, i = knn_scan(dist, Q, X, K, chunk=8192)
+    jax.block_until_ready(d)
+    # second call = steady-state (compiled)
+    t0 = time.time()
+    d, i = knn_scan(dist, Q, X, K, chunk=8192)
+    jax.block_until_ready(d)
+    return time.time() - t0, np.asarray(i)
+
+
+def run(n_db: int = 8000, n_q: int = 100, out_dir: str = "artifacts/bench",
+        quick: bool = False, builder: str = "nndescent"):
+    combos = COMBOS[:4] + COMBOS[-1:] if quick else COMBOS
+    efs = EFS[:4] if quick else EFS
+    all_results = []
+    for name, dim, dist_name in combos:
+        jax.clear_caches()  # XLA:CPU JIT dylib budget: ~800 fresh closures
+        # otherwise exhaust the in-process linker (bench_output 2026-07-15)
+        Q, X, viewed, natural = load(name, dim, n_db, n_q)
+        dist = viewed if viewed is not None else get_distance(dist_name)
+        bf_time, true_ids = _bruteforce_time(dist, Q, X)
+
+        variants = [("none", "none"), ("avg", "none"), ("min", "none"),
+                    ("reverse", "none"), ("l2", "none"), ("min", "min")]
+        if name == "manner":
+            variants = [("none", "none"), ("natural", "none"),
+                        ("reverse", "none"), ("natural", "natural")]
+
+        for index_sym, query_sym in variants:
+            try:
+                idx = ANNIndex.build(
+                    X, dist, index_sym=index_sym, query_sym=query_sym,
+                    builder=builder, NN=15, ef_construction=100,
+                    nnd_iters=4 if quick else 8,
+                    key=jax.random.PRNGKey(7), natural=natural,
+                )
+            except Exception as e:  # noqa: BLE001 (record & continue)
+                print(f"[fig12] {name}-{dim} {dist_name} {index_sym}-{query_sym}"
+                      f" BUILD FAILED: {e}")
+                continue
+            frontier = []
+            for ef in efs:
+                search = idx.searcher(K, ef, k_c=ef if query_sym != "none" else None)
+                d, ids, n_evals, hops = search(Q)
+                jax.block_until_ready(d)
+                t0 = time.time()
+                d, ids, n_evals, hops = search(Q)
+                jax.block_until_ready(d)
+                wall = time.time() - t0
+                frontier.append({
+                    "ef": ef,
+                    "recall": round(recall_at_k(np.asarray(ids), true_ids), 4),
+                    "eval_reduction": round(speedup_model(X.shape[0],
+                                                          np.asarray(n_evals)), 2),
+                    "wall_speedup": round(bf_time / max(wall, 1e-9), 2),
+                })
+            best = max(frontier, key=lambda r: (r["recall"], r["eval_reduction"]))
+            print(f"[fig12] {name}-{dim:>4} {dist_name:>14} "
+                  f"{index_sym}-{query_sym:>7}: best recall={best['recall']:.3f} "
+                  f"evals_x{best['eval_reduction']:.1f} wall_x{best['wall_speedup']:.1f}")
+            all_results.append({
+                "dataset": f"{name}-{dim}", "distance": dist_name,
+                "index_sym": index_sym, "query_sym": query_sym,
+                "builder": builder, "n_db": n_db, "frontier": frontier,
+            })
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fig12.json"), "w") as f:
+        json.dump(all_results, f, indent=1)
+    return all_results
+
+
+if __name__ == "__main__":
+    run()

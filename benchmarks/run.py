@@ -1,0 +1,54 @@
+"""Benchmark orchestrator: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table3|fig12|kernels]
+
+Outputs land in artifacts/bench/*.json and summary lines on stdout;
+EXPERIMENTS.md SSRepro-* cites these artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced combos/sizes (CI mode)")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "table3", "fig12", "kernels"])
+    ap.add_argument("--n-db", type=int, default=None)
+    ap.add_argument("--n-q", type=int, default=None)
+    args = ap.parse_args()
+
+    n_db = args.n_db or (3000 if args.quick else 5000)
+    n_q = args.n_q or (60 if args.quick else 100)
+
+    t0 = time.time()
+    if args.only in (None, "kernels"):
+        print("\n=== bench_kernels: Pallas distance kernel vs oracle ===")
+        from . import bench_kernels
+
+        bench_kernels.run(quick=args.quick)
+
+    if args.only in (None, "table3"):
+        print("\n=== Table 3: filter-and-refine symmetrization vs "
+              "distance learning ===")
+        from . import table3_filter_refine
+
+        table3_filter_refine.run(n_db=n_db, n_q=n_q, quick=args.quick)
+
+    if args.only in (None, "fig12"):
+        print("\n=== Figs 1-2: SW-graph index/query-time symmetrization "
+              "frontiers ===")
+        from . import fig12_swgraph
+
+        fig12_swgraph.run(n_db=n_db, n_q=n_q, quick=args.quick)
+
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s "
+          f"(artifacts/bench/*.json)")
+
+
+if __name__ == "__main__":
+    main()

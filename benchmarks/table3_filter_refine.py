@@ -1,0 +1,84 @@
+"""Reproduce Table 3: k_c needed for 99% recall under symmetrization vs
+distance-learning proxies (filter-and-refine with exact brute-force filter).
+
+Paper's claims to validate:
+  * symmetrization needs small k_c (20-160) except Manner & RandHist-32
+    (1280-5120),
+  * distance learning needs 640-20480 and often cannot reach 99% at all in
+    high dimensions,
+  * => graph methods that avoid full symmetrization have headroom.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import get_distance, knn_scan, symmetrized
+from repro.core.filter_refine import kc_sweep
+from repro.core.metric_learning import l2_proxy, learn_mahalanobis
+
+from .datasets import TABLE3_ROWS, load
+
+K = 10
+
+
+def run(n_db: int = 8000, n_q: int = 100, max_pow: int = 7, out_dir: str = "artifacts/bench",
+        quick: bool = False):
+    rows = TABLE3_ROWS[:6] if quick else TABLE3_ROWS
+    results = []
+    for name, dim, dist_name in rows:
+        jax.clear_caches()
+        t0 = time.time()
+        Q, X, viewed, natural = load(name, dim, n_db, n_q)
+        dist = viewed if viewed is not None else get_distance(dist_name)
+        _, true_ids = knn_scan(dist, Q, X, K, chunk=4096)
+        true_ids = np.asarray(true_ids)
+
+        # --- symmetrization proxies: best of {avg, min} (paper shows best) ---
+        best_sym = None
+        for mode in ("min", "avg"):
+            proxy = symmetrized(dist, mode, natural=natural)
+            _, (kc, rec) = kc_sweep(dist, proxy, Q, X, true_ids, k=K,
+                                    max_pow=max_pow, chunk=4096)
+            if best_sym is None or (rec, -(kc or 1 << 30)) > (best_sym[2], -(best_sym[1] or 1 << 30)):
+                best_sym = (mode, kc, rec)
+
+        # --- distance learning: best of {mahalanobis, plain L2} ------------
+        best_learn = ("n/a", None, 0.0)
+        if name != "manner":  # paper: no learning for extreme-dim sparse text
+            for lname, proxy in (
+                ("mahalanobis", learn_mahalanobis(X, dist, jax.random.PRNGKey(3),
+                                                  steps=60 if quick else 200)),
+                ("l2", l2_proxy()),
+            ):
+                _, (kc, rec) = kc_sweep(dist, proxy, Q, X, true_ids, k=K,
+                                        max_pow=max_pow, chunk=4096)
+                if (rec, -(kc or 1 << 30)) > (best_learn[2], -(best_learn[1] or 1 << 30)):
+                    best_learn = (lname, kc, rec)
+
+        rec_row = {
+            "dataset": f"{name}-{dim}", "distance": dist_name,
+            "sym_mode": best_sym[0], "sym_kc": best_sym[1],
+            "sym_recall": round(best_sym[2], 4),
+            "learn_mode": best_learn[0], "learn_kc": best_learn[1],
+            "learn_recall": round(best_learn[2], 4),
+            "n_db": n_db, "n_q": n_q, "seconds": round(time.time() - t0, 1),
+        }
+        results.append(rec_row)
+        print(f"[table3] {rec_row['dataset']:>14} {dist_name:>14} | "
+              f"sym({best_sym[0]}) kc={best_sym[1]} r={best_sym[2]:.3f} | "
+              f"learn({best_learn[0]}) kc={best_learn[1]} r={best_learn[2]:.3f}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "table3.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    run()

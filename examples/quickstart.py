@@ -1,0 +1,48 @@
+"""Quickstart: non-metric k-NN with a neighborhood graph in ~30 lines.
+
+Builds an index over KL-divergence data (topic histograms), searches it
+DIRECTLY with the non-symmetric distance (the paper's headline capability),
+and compares against brute force.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import ANNIndex, get_distance, knn_scan, recall_at_k
+from repro.core.metrics import speedup_model
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+N_DB, N_QUERIES, DIM, K = 5_000, 64, 32, 10
+
+
+def main():
+    # 1. data: synthetic LDA-style topic histograms (Wiki-32 twin)
+    data = lda_like_histograms(jax.random.PRNGKey(0), N_DB + N_QUERIES, DIM)
+    queries, db = split_queries(data, N_QUERIES, jax.random.PRNGKey(1))
+
+    # 2. a NON-METRIC, NON-SYMMETRIC distance - no symmetrization anywhere
+    dist = get_distance("kl")
+
+    # 3. exact ground truth (left queries: d(x, q), data point first)
+    _, true_ids = knn_scan(dist, queries, db, K)
+
+    # 4. build the neighborhood graph (TPU-native NN-descent builder;
+    #    builder="swgraph" gives the paper's sequential insertion)
+    index = ANNIndex.build(db, dist, builder="nndescent", NN=15,
+                           key=jax.random.PRNGKey(2))
+
+    # 5. search with the ORIGINAL distance guiding the beam
+    dists, ids, n_evals, hops = index.search(queries, k=K, ef_search=96)
+
+    recall = recall_at_k(np.asarray(ids), np.asarray(true_ids))
+    speedup = speedup_model(N_DB, np.asarray(n_evals))
+    print(f"recall@{K}      : {recall:.3f}")
+    print(f"dist-eval cut  : {speedup:.1f}x fewer than brute force")
+    print(f"avg beam hops  : {float(np.mean(np.asarray(hops))):.1f}")
+    assert recall > 0.85
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""End-to-end serving driver: batched non-metric k-NN requests against a
+built index, with index-time symmetrization variants compared live.
+
+This is the paper's SS3 second experiment as a service: build once per
+variant, serve batched queries, report the recall / latency / distance-eval
+frontier (the Figs 1-2 axes).
+
+    PYTHONPATH=src python examples/serve_retrieval.py [--n-db 20000]
+"""
+
+import argparse
+
+from repro.launch.serve import build_and_serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-db", type=int, default=12_000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--distance", default="itakura_saito",
+                    help="try: kl | itakura_saito | renyi_0.25 | renyi_2")
+    args = ap.parse_args()
+
+    print(f"== serving {args.distance} over n={args.n_db} d={args.dim} ==")
+    rows = []
+    for index_sym in ("none", "min", "reverse", "l2"):
+        stats = build_and_serve(
+            distance=args.distance, n_db=args.n_db, dim=args.dim,
+            n_queries=256, batch=64, ef_search=96, index_sym=index_sym,
+        )
+        rows.append((index_sym, stats))
+
+    print("\nindex-time symmetrization frontier (query-time = original):")
+    print(f"{'index_sym':>10} {'recall@10':>10} {'evals cut':>10} "
+          f"{'p50 ms':>8} {'p99 ms':>8}")
+    for sym, s in rows:
+        print(f"{sym:>10} {s['recall@k']:>10.3f} {s['eval_reduction']:>9.1f}x "
+              f"{s['p50_latency_ms']:>8.2f} {s['p99_latency_ms']:>8.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Architecture registry: --arch <id> resolution for all 10 assigned
+architectures plus the paper's own retrieval configs."""
+
+from __future__ import annotations
+
+import importlib
+
+_ARCH_MODULES = {
+    # LM family
+    "yi-34b": ("repro.configs.yi_34b", "lm"),
+    "gemma3-12b": ("repro.configs.gemma3_12b", "lm"),
+    "llama3.2-1b": ("repro.configs.llama3_2_1b", "lm"),
+    "phi3.5-moe-42b-a6.6b": ("repro.configs.phi3_5_moe", "lm"),
+    "kimi-k2-1t-a32b": ("repro.configs.kimi_k2", "lm"),
+    # GNN
+    "gcn-cora": ("repro.configs.gcn_cora", "gnn"),
+    # recsys
+    "autoint": ("repro.configs.autoint", "recsys"),
+    "din": ("repro.configs.din", "recsys"),
+    "two-tower-retrieval": ("repro.configs.two_tower", "recsys"),
+    "dcn-v2": ("repro.configs.dcn_v2", "recsys"),
+    # the paper's own architecture
+    "swgraph-retrieval": ("repro.configs.paper_swgraph", "retrieval"),
+}
+
+ARCH_IDS = [a for a in _ARCH_MODULES if a != "swgraph-retrieval"]
+
+
+def get_family(arch: str) -> str:
+    return _ARCH_MODULES[arch][1]
+
+
+def get_config(arch: str):
+    mod_name, _family = _ARCH_MODULES[arch]
+    mod = importlib.import_module(mod_name)
+    if hasattr(mod, "FULL"):
+        return mod.FULL
+    return mod.WIKI128_KL  # paper retrieval default
+
+
+def get_smoke_config(arch: str):
+    mod_name, _family = _ARCH_MODULES[arch]
+    return importlib.import_module(mod_name).SMOKE
+
+
+def get_module(arch: str):
+    return importlib.import_module(_ARCH_MODULES[arch][0])

@@ -1,0 +1,27 @@
+"""Core non-metric neighborhood-graph retrieval library (the paper's contribution)."""
+
+from .distances import (
+    Distance,
+    apply_post,
+    available_distances,
+    get_distance,
+    itakura_saito,
+    kl_divergence,
+    l2_squared,
+    neg_inner_product,
+    renyi_divergence,
+)
+from .symmetrize import (
+    SYM_MODES,
+    ReversedDistance,
+    SymmetrizedDistance,
+    ViewedDistance,
+    symmetrized,
+)
+from .brute_force import ground_truth, knn_scan
+from .beam_search import beam_search_impl, make_batched_searcher
+from .swgraph import build_swgraph
+from .nndescent import build_nndescent
+from .filter_refine import filter_and_refine, kc_sweep, rerank
+from .index import ANNIndex
+from .metrics import recall_at_k, speedup_model

@@ -1,0 +1,120 @@
+"""Batched best-first beam search over a fixed-degree neighborhood graph.
+
+TPU adaptation of NMSLIB's SW-graph traversal (DESIGN.md SS2.2):
+
+  * adjacency is a static `(n, M)` int32 matrix (-1 padding),
+  * the beam is a fixed-size sorted array triple (dists, ids, expanded),
+  * the visited set is an exact `(n,)` bitmask per query,
+  * one step = gather M neighbor rows -> matmul-form distance -> merge-sort,
+  * termination matches NMSLIB: stop when the nearest unexpanded beam entry
+    is farther than the current worst beam member (efSearch semantics).
+
+The search distance is supplied through the PairDistance gather contract
+(``prep_scan`` / ``prep_query`` / ``score``), so index-time and query-time
+symmetrization variants all run through the same traversal code.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+class BeamState(NamedTuple):
+    beam_d: jax.Array  # (ef,) f32, ascending, inf-padded
+    beam_i: jax.Array  # (ef,) i32, -1-padded
+    expanded: jax.Array  # (ef,) bool (padding = True)
+    visited: jax.Array  # (n,) bool
+    n_evals: jax.Array  # () i32   distance evaluations (the paper's cost unit)
+    steps: jax.Array  # () i32
+
+
+def beam_search_impl(
+    neighbors,  # (n, M) int32
+    consts,  # pytree from dist.prep_scan(X), leading axis n
+    qc,  # pytree from dist.prep_query(q)
+    score_fn,  # (rows, qc) -> (M,) distances
+    entry,  # () i32 entry node
+    ef: int,
+    n_active=None,  # () i32: only nodes < n_active are searchable (build time)
+    max_steps: int | None = None,
+):
+    """Single-query beam search. Returns final BeamState (beam sorted asc)."""
+    n, M = neighbors.shape
+    if max_steps is None:
+        max_steps = n
+
+    visited = jnp.zeros((n,), dtype=bool)
+    if n_active is not None:
+        visited = jnp.arange(n) >= n_active
+    visited = visited.at[entry].set(True)
+
+    rows0 = jax.tree.map(lambda a: a[entry[None]], consts)
+    d0 = score_fn(rows0, qc)[0]
+
+    beam_d = jnp.full((ef,), INF, jnp.float32).at[0].set(d0.astype(jnp.float32))
+    beam_i = jnp.full((ef,), -1, jnp.int32).at[0].set(entry.astype(jnp.int32))
+    expanded = jnp.ones((ef,), bool).at[0].set(False)
+    state = BeamState(beam_d, beam_i, expanded, visited, jnp.int32(1), jnp.int32(0))
+
+    def cond(st: BeamState):
+        cand_d = jnp.min(jnp.where(st.expanded, INF, st.beam_d))
+        worst = st.beam_d[-1]
+        return (cand_d <= worst) & jnp.isfinite(cand_d) & (st.steps < max_steps)
+
+    def body(st: BeamState):
+        c = jnp.argmin(jnp.where(st.expanded, INF, st.beam_d))
+        node = st.beam_i[c]
+        expanded = st.expanded.at[c].set(True)
+
+        nbrs = neighbors[node]  # (M,)
+        safe = jnp.where(nbrs >= 0, nbrs, 0)
+        valid = (nbrs >= 0) & ~st.visited[safe]
+        visited = st.visited.at[safe].max(valid)
+
+        rows = jax.tree.map(lambda a: a[safe], consts)
+        d = jnp.where(valid, score_fn(rows, qc).astype(jnp.float32), INF)
+
+        all_d = jnp.concatenate([st.beam_d, d])
+        all_i = jnp.concatenate([st.beam_i, nbrs])
+        all_e = jnp.concatenate([expanded, ~valid])
+        order = jnp.argsort(all_d)[:ef]
+        return BeamState(
+            all_d[order],
+            all_i[order],
+            all_e[order],
+            visited,
+            st.n_evals + jnp.sum(valid, dtype=jnp.int32),
+            st.steps + 1,
+        )
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def make_batched_searcher(dist, neighbors, X, ef: int, k: int, entry: int = 0,
+                          max_steps: int | None = None):
+    """Build a jitted batched searcher for a fixed index + search distance.
+
+    Returns ``search(Q) -> (dists (B,k), ids (B,k), n_evals (B,), hops (B,))``
+    where distances are under ``dist`` in the paper's left-query convention.
+    """
+    consts = dist.prep_scan(X)
+    entry_arr = jnp.int32(entry)
+
+    @jax.jit
+    def search(Q):
+        def single(q):
+            qc = dist.prep_query(q)
+            st = beam_search_impl(
+                neighbors, consts, qc, dist.score, entry_arr, ef, max_steps=max_steps
+            )
+            return st.beam_d[:k], st.beam_i[:k], st.n_evals, st.steps
+
+        return jax.vmap(single)(Q)
+
+    return search

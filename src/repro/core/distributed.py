@@ -1,0 +1,126 @@
+"""Distributed (sharded) retrieval: scatter-gather over DB shards.
+
+The 1000-node serving architecture (DESIGN.md SS2.4): database rows are
+sharded over the ("pod", "data") mesh axes; every shard owns a LOCAL
+subgraph built over its rows; a query batch is broadcast, each shard runs a
+local beam search (or brute-force scan), and the per-shard top-k are merged
+with one all_gather + re-sort.  Exactness of the merge: global top-k is a
+subset of the union of per-shard top-k, so the merge loses nothing.
+
+Straggler mitigation (design for real clusters): the merge is
+order-insensitive, so a serving frontend can accept the first s-of-S shard
+responses - bounded-staleness top-k; recall impact is benchmarked in
+benchmarks/fig12_swgraph.py via shard-dropout simulation here.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .beam_search import beam_search_impl
+
+
+def _merge(all_d, all_i, k):
+    neg, pos = jax.lax.top_k(-all_d, k)
+    return -neg, jnp.take_along_axis(all_i, pos, axis=-1)
+
+
+def sharded_knn_scan(mesh, dist, Q, X_sharded, k: int, db_axes=("data",)):
+    """Exact distributed brute-force k-NN.
+
+    X_sharded: (n, m) with rows sharded over ``db_axes``; Q replicated.
+    Returns (dists (B, k), ids (B, k)) replicated, ids GLOBAL row indices.
+    """
+    n_shards = 1
+    for a in db_axes:
+        n_shards *= int(mesh.shape[a])
+    n = X_sharded.shape[0]
+    n_local = n // n_shards
+
+    def local(Q, X_local):
+        shard = jax.lax.axis_index(db_axes)
+        d = dist.query_matrix(Q, X_local, mode="left")  # (B, n_local)
+        kk = min(k, n_local)
+        neg, pos = jax.lax.top_k(-d, kk)
+        ids = pos + shard * n_local
+        dloc, iloc = -neg, ids
+        # gather all shards' candidates and merge (replicated result)
+        all_d = jax.lax.all_gather(dloc, db_axes, axis=1, tiled=True)
+        all_i = jax.lax.all_gather(iloc, db_axes, axis=1, tiled=True)
+        return _merge(all_d, all_i, k)
+
+    db_spec = P(db_axes, None)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, None), db_spec),
+        out_specs=(P(None, None), P(None, None)),
+        check_rep=False,
+    )(Q, X_sharded)
+
+
+def sharded_graph_search(mesh, dist, Q, X_sharded, neighbors_sharded, k: int,
+                         ef: int, db_axes=("data",), drop_shards: int = 0):
+    """Distributed graph search: local beam per shard + global merge.
+
+    ``neighbors_sharded``: (n, M) int32 with LOCAL row ids per shard
+    (each shard's subgraph indexes its own rows 0..n_local-1).
+    ``drop_shards``: simulate straggler-dropped shards (first s responses).
+    """
+    n_shards = 1
+    for a in db_axes:
+        n_shards *= int(mesh.shape[a])
+    n = X_sharded.shape[0]
+    n_local = n // n_shards
+
+    def local(Q, X_local, nbrs_local):
+        shard = jax.lax.axis_index(db_axes)
+        consts = dist.prep_scan(X_local)
+
+        def single(q):
+            qc = dist.prep_query(q)
+            st = beam_search_impl(nbrs_local, consts, qc, dist.score,
+                                  jnp.int32(0), ef)
+            return st.beam_d[:k], st.beam_i[:k], st.n_evals
+
+        dloc, iloc, evals = jax.vmap(single)(Q)
+        iloc = jnp.where(iloc >= 0, iloc + shard * n_local, -1)
+        if drop_shards:
+            dead = shard >= (n_shards - drop_shards)
+            dloc = jnp.where(dead, jnp.inf, dloc)
+        all_d = jax.lax.all_gather(dloc, db_axes, axis=1, tiled=True)
+        all_i = jax.lax.all_gather(iloc, db_axes, axis=1, tiled=True)
+        d, i = _merge(all_d, all_i, k)
+        return d, i, jax.lax.psum(evals, db_axes)
+
+    db_spec = P(db_axes, None)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, None), db_spec, db_spec),
+        out_specs=(P(None, None), P(None, None), P(None)),
+        check_rep=False,
+    )(Q, X_sharded, neighbors_sharded)
+
+
+def build_local_subgraphs(mesh, dist, X_sharded, db_axes=("data",), NN: int = 15,
+                          nnd_iters: int = 8, key=None):
+    """Build per-shard NN-descent subgraphs (local row ids) under shard_map."""
+    from .nndescent import build_nndescent
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    def local(X_local, key):
+        nbrs, _ = build_nndescent(dist, X_local, key, K=NN, iters=nnd_iters)
+        return nbrs
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(db_axes, None), P(None)),
+        out_specs=P(db_axes, None),
+        check_rep=False,
+    )(X_sharded, jax.random.split(key, 1)[0])

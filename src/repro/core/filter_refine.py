@@ -1,0 +1,69 @@
+"""Filter-and-refine retrieval (paper SS3, first experimental series).
+
+A proxy distance (learned metric, symmetrized distance, or L2) generates
+k_c candidates by brute-force scan; candidates are re-ranked under the
+ORIGINAL (non-symmetric) distance.  The paper's Table 3 measures the k_c
+needed to reach 99% recall - this module is that machinery.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .brute_force import knn_scan
+
+
+@functools.partial(jax.jit, static_argnames=("orig_dist", "k", "mode"))
+def rerank(orig_dist, Q, X, cand_ids, k: int, mode: str = "left"):
+    """Re-rank candidate ids under the original distance; return top-k.
+
+    cand_ids: (B, k_c) int32 (may contain -1 padding).
+    """
+    safe = jnp.where(cand_ids >= 0, cand_ids, 0)
+
+    def one(q, ids, ids_safe):
+        cand = X[ids_safe]  # (k_c, m)
+        d = orig_dist.query_matrix(q[None, :], cand, mode=mode)[0]
+        d = jnp.where(ids >= 0, d, jnp.inf)
+        neg_top, pos = jax.lax.top_k(-d, k)
+        return -neg_top, ids[pos]
+
+    return jax.vmap(one)(Q, cand_ids, safe)
+
+
+def filter_and_refine(orig_dist, proxy_dist, Q, X, k: int, k_c: int,
+                      chunk: int = 8192, proxy_mode: str = "left"):
+    """Full pipeline: brute-force k_c-NN under proxy -> re-rank under original.
+
+    Returns (dists (B,k) under the original distance, ids (B,k)).
+    """
+    _, cand = knn_scan(proxy_dist, Q, X, k_c, chunk=chunk, mode=proxy_mode)
+    return rerank(orig_dist, Q, X, cand, k)
+
+
+def kc_sweep(orig_dist, proxy_dist, Q, X, true_ids, k: int = 10, max_pow: int = 7,
+             target: float = 0.99, chunk: int = 8192):
+    """The paper's Table-3 protocol: test k_c = k * 2^i for i <= max_pow,
+    report the first k_c reaching ``target`` recall (or the best reached).
+
+    Returns a list of (k_c, recall) and the (k_c*, recall*) summary tuple.
+    """
+    from .metrics import recall_at_k
+
+    results = []
+    best = (None, 0.0)
+    for i in range(0, max_pow + 1):
+        k_c = k * (2**i)
+        if k_c > X.shape[0]:
+            break
+        _, ids = filter_and_refine(orig_dist, proxy_dist, Q, X, k, k_c, chunk=chunk)
+        r = recall_at_k(ids, true_ids)
+        results.append((k_c, r))
+        if r > best[1]:
+            best = (k_c, r)
+        if r >= target:
+            return results, (k_c, r)
+    return results, best

@@ -1,0 +1,123 @@
+"""High-level ANN index API: the paper's SW-graph scenarios as one object.
+
+Scenario knobs (paper SS3, second experimental series):
+
+  index_sym  in {none, avg, min, reverse, l2, natural}  - distance used to
+              CONSTRUCT the neighborhood graph ("a-" marker in Figs 1-2).
+  query_sym  in {none, avg, min, natural}               - distance used to
+              GUIDE the beam search ("-b" marker).  "none" searches with the
+              original non-symmetric distance (the paper's key capability);
+              anything else is the full-symmetrization scenario and the beam
+              produces k_c candidates that are re-ranked under the original
+              distance.
+
+Builders: "swgraph" (faithful sequential insertion) or "nndescent"
+(TPU-parallel refinement) - DESIGN.md SS2.3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .beam_search import make_batched_searcher
+from .filter_refine import rerank
+from .nndescent import build_nndescent
+from .swgraph import build_swgraph
+from .symmetrize import symmetrized
+
+
+@dataclasses.dataclass
+class ANNIndex:
+    """A built neighborhood-graph index over a database X."""
+
+    X: jax.Array
+    neighbors: jax.Array  # (n, M) int32
+    dist: object  # original distance (PairDistance)
+    search_dist: object  # distance guiding the beam (may equal dist)
+    query_sym: str
+    entry: int = 0
+    build_info: dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------ build
+
+    @classmethod
+    def build(
+        cls,
+        X,
+        dist,
+        *,
+        index_sym: str = "none",
+        query_sym: str = "none",
+        builder: str = "nndescent",
+        NN: int = 15,
+        ef_construction: int = 100,
+        M_max: Optional[int] = None,
+        nnd_iters: int = 8,
+        key=None,
+        natural: Optional[Callable] = None,
+    ) -> "ANNIndex":
+        build_dist = symmetrized(dist, index_sym, natural=natural)
+        search_dist = symmetrized(dist, query_sym, natural=natural) if query_sym != "none" else dist
+
+        if builder == "swgraph":
+            neighbors, degrees = build_swgraph(
+                build_dist, X, NN=NN, ef_construction=ef_construction, M_max=M_max
+            )
+        elif builder == "nndescent":
+            key = key if key is not None else jax.random.PRNGKey(0)
+            neighbors, degrees = build_nndescent(
+                build_dist, X, key, K=NN, iters=nnd_iters, M_out=M_max
+            )
+        else:
+            raise ValueError(f"unknown builder {builder!r}")
+
+        info = dict(
+            builder=builder,
+            index_sym=index_sym,
+            query_sym=query_sym,
+            NN=NN,
+            ef_construction=ef_construction,
+            mean_degree=float(jnp.mean(degrees.astype(jnp.float32))),
+        )
+        return cls(
+            X=X,
+            neighbors=neighbors,
+            dist=dist,
+            search_dist=search_dist,
+            query_sym=query_sym,
+            build_info=info,
+        )
+
+    # ----------------------------------------------------------------- search
+
+    def searcher(self, k: int, ef_search: int, k_c: Optional[int] = None):
+        """Return a jitted ``search(Q) -> (dists, ids, n_evals, hops)``.
+
+        Full-symmetrization scenario (query_sym != none): the beam runs under
+        the symmetrized distance with ef >= k_c, producing k_c candidates
+        re-ranked under the original distance (counted into n_evals).
+        """
+        if self.query_sym == "none":
+            ef = max(ef_search, k)
+            return make_batched_searcher(self.dist, self.neighbors, self.X, ef, k,
+                                         entry=self.entry)
+
+        k_c = k_c or max(ef_search, k)
+        ef = max(ef_search, k_c)
+        inner = make_batched_searcher(self.search_dist, self.neighbors, self.X, ef, k_c,
+                                      entry=self.entry)
+
+        @jax.jit
+        def search(Q):
+            _, cand, n_evals, hops = inner(Q)
+            d, ids = rerank(self.dist, Q, self.X, cand, k)
+            return d, ids, n_evals + jnp.int32(k_c), hops
+
+        return search
+
+    def search(self, Q, k: int = 10, ef_search: int = 64, k_c: Optional[int] = None):
+        return self.searcher(k, ef_search, k_c)(Q)

@@ -1,0 +1,49 @@
+"""Retrieval quality / efficiency metrics (paper SS3).
+
+The paper's effectiveness metric is recall@k (average fraction of true
+neighbors found, order-insensitive).  Its efficiency metric is wall-clock
+speedup over brute force on a laptop; hardware-independently we also report
+the *distance-computation reduction* n_db / n_evals, which is what the
+speedup tracks when the distance dominates (it does for Renyi/KL on CPU).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def recall_at_k(found_ids, true_ids) -> float:
+    """Average |found intersect true| / |true| over the query batch."""
+    found = np.asarray(found_ids)
+    true = np.asarray(true_ids)
+    assert found.shape[0] == true.shape[0]
+    hits = 0
+    total = 0
+    for f, t in zip(found, true):
+        t_set = set(int(x) for x in t if x >= 0)
+        f_set = set(int(x) for x in f if x >= 0)
+        hits += len(t_set & f_set)
+        total += len(t_set)
+    return hits / max(total, 1)
+
+
+def speedup_model(n_db: int, n_evals_per_query) -> float:
+    """Distance-evaluation reduction vs brute force (model speedup)."""
+    ev = float(np.mean(np.asarray(n_evals_per_query)))
+    return n_db / max(ev, 1.0)
+
+
+def order_aware_recall(found_ids, true_ids) -> float:
+    """Stricter position-weighted recall (ties in the paper broken arbitrarily,
+    so we use it only as a diagnostic, not for headline numbers)."""
+    found = np.asarray(found_ids)
+    true = np.asarray(true_ids)
+    k = true.shape[1]
+    w = 1.0 / np.log2(np.arange(2, k + 2))
+    score, norm = 0.0, w.sum()
+    for f, t in zip(found, true):
+        t_list = [int(x) for x in t]
+        for rank, x in enumerate(t_list):
+            if x in set(int(y) for y in f):
+                score += w[rank]
+    return score / (norm * found.shape[0])

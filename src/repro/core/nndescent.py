@@ -1,0 +1,124 @@
+"""Parallel NN-descent graph construction (Dong et al. 2011).
+
+The TPU-native alternative to sequential SW-graph insertion (DESIGN.md
+SS2.3): every refinement round is a fully batched neighbor-of-neighbor join -
+
+    candidates(i) = adj[adj[i]]  u  sampled-reverse(i)  u  random(i)
+    adj(i) <- top-K by d_build(x_c, x_i) after id-dedup
+
+All rounds are dense gathers + matmul-form distance blocks + top-K merges, so
+construction itself runs at MXU throughput.  Like SW-graph construction, the
+build distance is the INDEX-time distance (symmetrization knob applies).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+def _score_rows(dist, consts, ids, X):
+    """d_build(X[ids[i, c]], X[i]) for every node i, candidate c. (n, C)."""
+
+    def one(node_ids, q):
+        safe = jnp.where(node_ids >= 0, node_ids, 0)
+        rows = jax.tree.map(lambda a: a[safe], consts)
+        return dist.score(rows, dist.prep_query(q)).astype(jnp.float32)
+
+    return jax.vmap(one)(ids, X)
+
+
+def _dedup_topk(d, ids, K: int):
+    """Per-row: drop duplicate ids (keep best), return K smallest by d."""
+    # sort by id; mark repeats as +inf; then sort by distance
+    order = jnp.argsort(ids, axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    d_s = jnp.take_along_axis(d, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((ids.shape[0], 1), bool), ids_s[:, 1:] == ids_s[:, :-1]], axis=1
+    )
+    d_s = jnp.where(dup | (ids_s < 0), INF, d_s)
+    sel = jnp.argsort(d_s, axis=1)[:, :K]
+    return jnp.take_along_axis(d_s, sel, axis=1), jnp.take_along_axis(ids_s, sel, axis=1)
+
+
+def _sampled_reverse(adj, K_rev: int, key):
+    """A sampled fixed-width reverse-neighbor list via colliding scatters."""
+    n, K = adj.shape
+    rev = jnp.full((n, K_rev), -1, jnp.int32)
+    src = jnp.arange(n, dtype=jnp.int32)
+    # randomize slot assignment so collisions evict uniformly across rounds
+    slots = jax.random.randint(key, (K,), 0, K_rev)
+    for k in range(K):
+        dst = adj[:, k]
+        safe = jnp.where(dst >= 0, dst, 0)
+        rev = rev.at[safe, slots[k]].set(jnp.where(dst >= 0, src, rev[safe, slots[k]]))
+    return rev
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dist", "K", "iters", "n_random", "M_out", "add_reverse")
+)
+def build_nndescent(
+    dist,
+    X,
+    key,
+    K: int = 16,
+    iters: int = 8,
+    n_random: int = 8,
+    M_out: int | None = None,
+    add_reverse: bool = True,
+):
+    """Returns ``(neighbors (n, M_out) int32, degrees (n,))``.
+
+    ``M_out`` defaults to 2K when ``add_reverse`` (forward + sampled reverse
+    edges - undirected graphs searched better in the paper's refs [20]).
+    """
+    n = X.shape[0]
+    K = min(K, n - 1)
+    consts = dist.prep_scan(X)
+    iota = jnp.arange(n, dtype=jnp.int32)
+
+    # --- init: random neighbors (exclude self by +1 shift mod n) ---
+    key, k0 = jax.random.split(key)
+    init_ids = (iota[:, None] + 1 + jax.random.randint(k0, (n, K), 0, n - 1)) % n
+    init_d = _score_rows(dist, consts, init_ids, X)
+    adj_d, adj = _dedup_topk(init_d, init_ids, K)
+
+    def round_(carry, key_r):
+        adj_d, adj = carry
+        k1, k2 = jax.random.split(key_r)
+        safe = jnp.where(adj >= 0, adj, 0)
+        two_hop = safe[safe.reshape(-1)].reshape(n, K * K)
+        rev = _sampled_reverse(adj, K, k1)
+        rnd = jax.random.randint(k2, (n, n_random), 0, n)
+        cand = jnp.concatenate([two_hop, rev, rnd], axis=1)
+        cand = jnp.where(cand == iota[:, None], -1, cand)  # no self loops
+        cand_d = _score_rows(dist, consts, cand, X)
+        cand_d = jnp.where(cand >= 0, cand_d, INF)
+        all_d = jnp.concatenate([adj_d, cand_d], axis=1)
+        all_i = jnp.concatenate([adj, cand], axis=1)
+        new_d, new_i = _dedup_topk(all_d, all_i, K)
+        n_changed = jnp.sum(new_i != adj)
+        return (new_d, new_i), n_changed
+
+    keys = jax.random.split(key, iters)
+    (adj_d, adj), changes = jax.lax.scan(round_, (adj_d, adj), keys)
+
+    if add_reverse:
+        M_out = M_out or 2 * K
+        rev = _sampled_reverse(adj, M_out - K, jax.random.fold_in(key, 7))
+        # drop reverse edges that duplicate forward ones
+        dup = (rev[:, :, None] == adj[:, None, :]).any(axis=2)
+        rev = jnp.where(dup, -1, rev)
+        neighbors = jnp.concatenate([adj, rev], axis=1)
+    else:
+        M_out = M_out or K
+        neighbors = adj[:, :M_out]
+
+    degrees = jnp.sum(neighbors >= 0, axis=1, dtype=jnp.int32)
+    return neighbors, degrees

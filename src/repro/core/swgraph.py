@@ -1,0 +1,89 @@
+"""SW-graph construction (Malkov et al. 2014) - the paper's index.
+
+Faithful incremental insertion: point i is inserted by running a beam search
+(efConstruction) over the graph built from points 0..i-1 *under the
+index-time distance* (which may be a symmetrized / reversed / L2 proxy - the
+paper's central knob), then connected bidirectionally to its NN nearest
+neighbors found.
+
+Deviation from NMSLIB (documented in DESIGN.md SS2.3): node degree is capped
+at M_max with farthest-edge eviction so the adjacency stays a static
+`(n, M_max)` array.  NMSLIB lets undirected degrees grow unboundedly;
+practical HNSW caps the same way.
+
+Edge slot convention for eviction under a NON-SYMMETRIC build distance: the
+slot of node j holding neighbor t stores d_build(x_t, x_j) - the left-query
+distance of the neighbor towards the owner - which is exactly the quantity
+the beam search computes when j is the inserted point.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .beam_search import beam_search_impl
+
+
+@functools.partial(jax.jit, static_argnames=("dist", "NN", "ef_construction", "M_max"))
+def build_swgraph(dist, X, NN: int = 15, ef_construction: int = 100, M_max: int | None = None):
+    """Build an SW-graph over X under ``dist`` (any PairDistance).
+
+    Returns ``(neighbors (n, M_max) int32, degrees (n,) int32)``.
+    """
+    if M_max is None:
+        M_max = 2 * NN
+    assert M_max >= NN
+    n = X.shape[0]
+    consts = dist.prep_scan(X)
+    ef = max(ef_construction, NN)
+
+    adj = jnp.full((n, M_max), -1, jnp.int32)
+    adj_d = jnp.full((n, M_max), jnp.inf, jnp.float32)
+
+    def insert(i, carry):
+        adj, adj_d = carry
+        q = X[i]
+        qc = dist.prep_query(q)
+        st = beam_search_impl(
+            adj, consts, qc, dist.score, jnp.int32(0), ef, n_active=i
+        )
+        ids = st.beam_i[:NN]
+        ds = st.beam_d[:NN]
+        valid = (ids >= 0) & jnp.isfinite(ds)
+
+        # forward edges: i -> ids, slot distance d_build(x_t, x_i) = ds
+        row_i = jnp.full((M_max,), -1, jnp.int32).at[:NN].set(jnp.where(valid, ids, -1))
+        row_d = jnp.full((M_max,), jnp.inf, jnp.float32).at[:NN].set(
+            jnp.where(valid, ds, jnp.inf)
+        )
+        adj = adj.at[i].set(row_i)
+        adj_d = adj_d.at[i].set(row_d)
+
+        # reverse edges: insert i into each neighbor j's list (evict farthest)
+        rows_i = jax.tree.map(lambda a: a[i[None] if hasattr(i, "shape") else jnp.array([i])],
+                              consts)
+
+        def add_reverse(t, carry):
+            adj, adj_d = carry
+            j = ids[t]
+            ok = valid[t]
+            j_safe = jnp.where(ok, j, 0)
+            # d_build(x_i, x_j): i is the candidate (left), j the owner (query side)
+            qc_j = dist.prep_query(X[j_safe])
+            d_ij = dist.score(rows_i, qc_j)[0].astype(jnp.float32)
+            slot = jnp.argmax(adj_d[j_safe])  # free slots are +inf -> chosen first
+            better = d_ij < adj_d[j_safe, slot]
+            do = ok & better
+            adj = adj.at[j_safe, slot].set(jnp.where(do, i, adj[j_safe, slot]))
+            adj_d = adj_d.at[j_safe, slot].set(jnp.where(do, d_ij, adj_d[j_safe, slot]))
+            return adj, adj_d
+
+        adj, adj_d = jax.lax.fori_loop(0, NN, add_reverse, (adj, adj_d))
+        return adj, adj_d
+
+    adj, adj_d = jax.lax.fori_loop(1, n, insert, (adj, adj_d))
+    degrees = jnp.sum(adj >= 0, axis=1, dtype=jnp.int32)
+    return adj, degrees

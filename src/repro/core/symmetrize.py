@@ -1,0 +1,233 @@
+"""Distance symmetrization and quasi-symmetrization (SS2/SS3 of the paper).
+
+The paper's central experimental knob: the distance used to CONSTRUCT the
+neighborhood graph may differ from the distance used to SEARCH it.
+
+    none    : the original distance d(u, v)
+    avg     : (d(u, v) + d(v, u)) / 2                      (Eq. 2)
+    min     : min(d(u, v), d(v, u))                        (Eq. 3)
+    reverse : d(v, u)              (argument-reversed quasi-symmetrization)
+    l2      : squared Euclidean    (quasi-symmetrization proxy)
+    natural : distance-specific natural symmetrization; for BM25 both sides
+              are vectorized as TF * sqrt(IDF)             (Eq. 4)
+
+All wrappers implement the same PairDistance interface as
+``repro.core.distances.Distance``:
+
+    matrix(U, V)                D[i,j] = d(U[i], V[j])
+    query_matrix(Q, X, mode)    (B, N) query-vs-database distances
+    pairwise(u, v)              pointwise oracle
+    prep_scan(X) / prep_query(q) / score(rows, qc)
+                                gather-able per-row constants for beam search
+
+so graph builders and searchers are agnostic to the symmetrization mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .distances import Distance, get_distance, l2_squared
+
+SYM_MODES = ("none", "avg", "min", "reverse", "l2", "natural")
+
+
+# ---------------------------------------------------------------------------
+# wrappers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReversedDistance:
+    """d_rev(u, v) = d(v, u)."""
+
+    base: Distance
+
+    @property
+    def name(self):
+        return f"{self.base.name}-reverse"
+
+    @property
+    def needs_simplex(self):
+        return self.base.needs_simplex
+
+    def matrix(self, U, V):
+        return self.base.matrix(V, U).T
+
+    def query_matrix(self, Q, X, mode: str = "left"):
+        # left mode: D[b,i] = d_rev(X[i], Q[b]) = d(Q[b], X[i]) = base right mode
+        return self.base.query_matrix(Q, X, mode="right" if mode == "left" else "left")
+
+    def pairwise(self, u, v):
+        return self.base.pairwise(v, u)
+
+    def pairwise_batch(self, U, V):
+        return jax.vmap(self.pairwise)(U, V)
+
+    def prep_scan(self, X):
+        return {"rep": self.base.prep_right(X), "bias": self.base.bias_right(X)}
+
+    def prep_query(self, q):
+        return {
+            "rep": self.base.prep_left(q[None, :])[0],
+            "bias": self.base.bias_left(q[None, :])[0],
+        }
+
+    def score(self, rows, qc):
+        from .distances import apply_post
+
+        s = rows["rep"] @ qc["rep"]
+        # left-mode d_rev(x, q) = d(q, x): q is the LEFT argument of base.
+        return apply_post(self.base.post_id, s, qc["bias"], rows["bias"], self.base.c0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SymmetrizedDistance:
+    """avg- or min-based symmetrization (Eqs. 2-3).
+
+    Works over ANY PairDistance (including ViewedDistance / BM25): it pairs
+    the base with its argument-reversal and combines - two matmul-form
+    evaluations per block.
+    """
+
+    base: object  # any PairDistance
+    mode: str  # "avg" | "min"
+
+    def __post_init__(self):
+        if self.mode not in ("avg", "min"):
+            raise ValueError(self.mode)
+
+    @property
+    def _rev(self):
+        return reverse_of(self.base)
+
+    @property
+    def name(self):
+        return f"{self.base.name}-{self.mode}"
+
+    @property
+    def needs_simplex(self):
+        return self.base.needs_simplex
+
+    def _combine(self, a, b):
+        return (a + b) * 0.5 if self.mode == "avg" else jnp.minimum(a, b)
+
+    def matrix(self, U, V):
+        return self._combine(self.base.matrix(U, V), self.base.matrix(V, U).T)
+
+    def query_matrix(self, Q, X, mode: str = "left"):
+        del mode  # symmetric by construction
+        return self._combine(
+            self.base.query_matrix(Q, X, mode="left"),
+            self.base.query_matrix(Q, X, mode="right"),
+        )
+
+    def pairwise(self, u, v):
+        return self._combine(self.base.pairwise(u, v), self.base.pairwise(v, u))
+
+    def pairwise_batch(self, U, V):
+        return jax.vmap(self.pairwise)(U, V)
+
+    def prep_scan(self, X):
+        return {"f": self.base.prep_scan(X), "r": self._rev.prep_scan(X)}
+
+    def prep_query(self, q):
+        return {"f": self.base.prep_query(q), "r": self._rev.prep_query(q)}
+
+    def score(self, rows, qc):
+        return self._combine(
+            self.base.score(rows["f"], qc["f"]),
+            self._rev.score(rows["r"], qc["r"]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ViewedDistance:
+    """A distance evaluated over role-dependent representations.
+
+    Used for BM25-style asymmetric vectorization: ``left_view`` maps a raw
+    record matrix to its left-argument (document) representation and
+    ``right_view`` to its right-argument (query) representation.  The
+    ``natural`` symmetrization of Eq. (4) is a ViewedDistance whose two views
+    coincide (TF * sqrt(IDF) on both sides).
+    """
+
+    base: Distance
+    left_view: Callable
+    right_view: Callable
+    view_name: str = "viewed"
+
+    @property
+    def name(self):
+        return f"{self.base.name}-{self.view_name}"
+
+    @property
+    def needs_simplex(self):
+        return False
+
+    def matrix(self, U, V):
+        return self.base.matrix(self.left_view(U), self.right_view(V))
+
+    def query_matrix(self, Q, X, mode: str = "left"):
+        if mode == "left":
+            return self.base.query_matrix(self.right_view(Q), self.left_view(X), mode="left")
+        return self.base.query_matrix(self.left_view(Q), self.right_view(X), mode="right")
+
+    def pairwise(self, u, v):
+        return self.base.pairwise(self.left_view(u[None])[0], self.right_view(v[None])[0])
+
+    def pairwise_batch(self, U, V):
+        return jax.vmap(self.pairwise)(U, V)
+
+    def prep_scan(self, X):
+        return self.base.prep_scan(self.left_view(X))
+
+    def prep_query(self, q):
+        return self.base.prep_query(self.right_view(q[None])[0])
+
+    def score(self, rows, qc):
+        return self.base.score(rows, qc)
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+
+def reverse_of(base):
+    """Argument reversal for any PairDistance.  ViewedDistance reverses by
+    swapping its role views AND reversing the inner distance:
+    vd_rev(u, v) = vd(v, u) = inner(L(v), R(u)) = inner_rev(R(u), L(v))."""
+    if isinstance(base, ViewedDistance):
+        return ViewedDistance(
+            ReversedDistance(base.base),
+            left_view=base.right_view,
+            right_view=base.left_view,
+            view_name=base.view_name + "-rev",
+        )
+    return ReversedDistance(base)
+
+
+def symmetrized(base, mode: str, natural: Optional[Callable] = None):
+    """Wrap ``base`` (a PairDistance) with a symmetrization mode.
+
+    ``natural`` — optional callable returning the distance-specific natural
+    symmetrization (e.g. built from dataset IDF statistics, Eq. 4).
+    """
+    if mode == "none":
+        return base
+    if mode == "reverse":
+        return reverse_of(base)
+    if mode in ("avg", "min"):
+        return SymmetrizedDistance(base, mode)
+    if mode == "l2":
+        return l2_squared()
+    if mode == "natural":
+        if natural is None:
+            raise ValueError("natural symmetrization requires a dataset-supplied distance")
+        return natural()
+    raise ValueError(f"unknown symmetrization mode {mode!r}; known: {SYM_MODES}")

@@ -1,0 +1,59 @@
+"""Host-side data pipeline: deterministic, resumable, prefetching.
+
+Design for real clusters (DESIGN.md SS7): batches are derived from
+(seed, step) only, so restart-after-failure resumes the stream exactly by
+fast-forwarding the cursor from the checkpoint - no host state to persist.
+A small background thread keeps ``prefetch`` batches ready so host
+generation overlaps device compute.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+
+class DataPipeline:
+    """Wraps ``make_batch(step) -> pytree`` with prefetch + resume."""
+
+    def __init__(self, make_batch: Callable[[int], object], *,
+                 start_step: int = 0, prefetch: int = 2):
+        self.make_batch = make_batch
+        self.step = start_step
+        self.prefetch = prefetch
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(prefetch, 1))
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _worker(self):
+        s = self.step
+        while not self._stop.is_set():
+            try:
+                batch = self.make_batch(s)
+            except Exception as e:  # surface in the consumer
+                self._q.put(e)
+                return
+            self._q.put((s, batch))
+            s += 1
+
+    def __iter__(self) -> Iterator:
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        s, batch = item
+        self.step = s + 1
+        return s, batch
+
+    def close(self):
+        self._stop.set()
+        while not self._q.empty():
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break

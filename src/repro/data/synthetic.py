@@ -1,0 +1,196 @@
+"""Synthetic dataset generators reproducing the paper's data statistics.
+
+The container is offline, so the paper's collections are reproduced as
+statistical twins (DESIGN.md SS4):
+
+  RandHist-d   : uniform samples from the d-simplex (Dirichlet(1,...,1))
+                 - exactly the paper's synthetic set.
+  Wiki-d/RCV-d : LDA topic histograms - sparse Dirichlet(alpha << 1) mimics
+                 the concentration profile of LDA document-topic posteriors.
+  Manner       : Zipf-sampled term counts vectorized as BM25 TF x IDF with
+                 the paper's asymmetric query/document representations
+                 (query = raw TF, document = saturated TF x IDF) and the
+                 natural shared-sqrt(IDF) symmetrization of Eq. (4).
+
+Also: token streams / criteo-like recsys batches / graph generators used by
+the assigned-architecture substrates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import EPS, neg_inner_product
+from repro.core.symmetrize import ViewedDistance
+
+# ---------------------------------------------------------------------------
+# histogram families (KL / Itakura-Saito / Renyi)
+# ---------------------------------------------------------------------------
+
+
+def random_histograms(key, n: int, d: int):
+    """RandHist-d: uniform on the simplex, floored at EPS (paper's setup)."""
+    x = jax.random.dirichlet(key, jnp.ones((d,)), (n,))
+    x = jnp.maximum(x, EPS)
+    return x / jnp.sum(x, axis=-1, keepdims=True)
+
+
+def lda_like_histograms(key, n: int, d: int, alpha: float = 0.08):
+    """Wiki-d / RCV-d proxy: concentrated Dirichlet topic histograms."""
+    x = jax.random.dirichlet(key, jnp.full((d,), alpha), (n,))
+    x = jnp.maximum(x, EPS)
+    return x / jnp.sum(x, axis=-1, keepdims=True)
+
+
+def make_histogram_dataset(name: str, key, n: int, d: int):
+    if name.startswith("randhist"):
+        return random_histograms(key, n, d)
+    if name.startswith(("wiki", "rcv")):
+        return lda_like_histograms(key, n, d)
+    raise ValueError(name)
+
+
+def split_queries(X, n_queries: int, key):
+    """Paper protocol: random split into queries and indexable points."""
+    n = X.shape[0]
+    perm = jax.random.permutation(key, n)
+    q_idx, db_idx = perm[:n_queries], perm[n_queries:]
+    return X[q_idx], X[db_idx]
+
+
+# ---------------------------------------------------------------------------
+# Manner-like sparse text with BM25 (asymmetric vectorization)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TextCollection:
+    """Term-count matrix + the role-dependent BM25 views (DESIGN.md SS2.1).
+
+    ``counts`` is the raw (n, V) term-count matrix (hashed vocabulary).
+    ``bm25()`` returns the paper's BM25 distance as a ViewedDistance:
+    left (document) view = saturated TF x IDF, right (query) view = raw TF.
+    ``natural()`` returns the Eq.-4 shared-sqrt(IDF) symmetrization.
+    """
+
+    counts: jax.Array  # (n, V) float32 term counts
+    idf: jax.Array  # (V,)
+    avg_len: float
+    k1: float = 1.2
+    b: float = 0.75
+
+    def doc_view(self, C):
+        length = jnp.sum(C, axis=-1, keepdims=True)
+        denom = C + self.k1 * (1.0 - self.b + self.b * length / self.avg_len)
+        tf = C * (self.k1 + 1.0) / jnp.maximum(denom, 1e-9)
+        return tf * self.idf[None, :]
+
+    def query_view(self, C):
+        return C  # raw query term frequencies (standard BM25)
+
+    def natural_view(self, C):
+        length = jnp.sum(C, axis=-1, keepdims=True)
+        denom = C + self.k1 * (1.0 - self.b + self.b * length / self.avg_len)
+        tf = C * (self.k1 + 1.0) / jnp.maximum(denom, 1e-9)
+        return tf * jnp.sqrt(self.idf)[None, :]
+
+    def bm25(self) -> ViewedDistance:
+        return ViewedDistance(
+            neg_inner_product("bm25"),
+            left_view=self.doc_view,
+            right_view=self.query_view,
+            view_name="bm25",
+        )
+
+    def natural(self) -> ViewedDistance:
+        return ViewedDistance(
+            neg_inner_product("bm25nat"),
+            left_view=self.natural_view,
+            right_view=self.natural_view,
+            view_name="natural",
+        )
+
+
+def text_collection(key, n: int, vocab: int = 2048, mean_len: int = 60) -> TextCollection:
+    """Zipf-sampled documents -> hashed term-count matrix (Manner proxy)."""
+    k1, k2 = jax.random.split(key)
+    # Zipf(1.1) over the hashed vocabulary via inverse-CDF on uniforms
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = ranks ** -1.1
+    probs /= probs.sum()
+    lengths = np.maximum(
+        np.asarray(jax.random.poisson(k1, mean_len, (n,))), 5
+    )
+    rng = np.random.default_rng(int(jax.random.randint(k2, (), 0, 2**31 - 1)))
+    counts = np.zeros((n, vocab), dtype=np.float32)
+    for i in range(n):
+        terms = rng.choice(vocab, size=int(lengths[i]), p=probs)
+        np.add.at(counts[i], terms, 1.0)
+    counts = jnp.asarray(counts)
+    df = jnp.sum(counts > 0, axis=0).astype(jnp.float32)
+    idf = jnp.log(1.0 + (n - df + 0.5) / (df + 0.5))
+    return TextCollection(counts=counts, idf=idf, avg_len=float(np.mean(lengths)))
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+
+def token_batches(key, vocab_size: int, batch: int, seq_len: int, n_batches: int):
+    """Deterministic synthetic LM batches (zipf-ish unigram + shift labels)."""
+    for i in range(n_batches):
+        k = jax.random.fold_in(key, i)
+        # squared-uniform sampling concentrates mass on low token ids (zipf-ish)
+        u = jax.random.uniform(k, (batch, seq_len + 1))
+        toks = (u * u * (vocab_size - 1)).astype(jnp.int32)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# recsys (criteo-like) batches
+# ---------------------------------------------------------------------------
+
+
+def recsys_batch(key, batch: int, n_dense: int, vocab_sizes, seq_len: int = 0):
+    """One synthetic CTR batch: dense feats, per-field categorical ids, label."""
+    ks = jax.random.split(key, 4)
+    dense = jax.random.normal(ks[0], (batch, n_dense)) if n_dense else None
+    sparse = jnp.stack(
+        [
+            (jax.random.uniform(jax.random.fold_in(ks[1], f), (batch,)) ** 2 * (v - 1)).astype(
+                jnp.int32
+            )
+            for f, v in enumerate(vocab_sizes)
+        ],
+        axis=1,
+    )  # (batch, n_fields), zipf-ish ids
+    out = {"sparse_ids": sparse, "label": jax.random.bernoulli(ks[2], 0.25, (batch,)).astype(jnp.float32)}
+    if dense is not None:
+        out["dense"] = dense
+    if seq_len:
+        hist = (jax.random.uniform(ks[3], (batch, seq_len)) ** 2 * (vocab_sizes[0] - 1)).astype(jnp.int32)
+        out["history"] = hist
+        out["hist_len"] = jax.random.randint(jax.random.fold_in(ks[3], 1), (batch,), 1, seq_len + 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# graphs
+# ---------------------------------------------------------------------------
+
+
+def random_graph(key, n_nodes: int, n_edges: int, d_feat: int, n_classes: int = 8):
+    """Random (power-law-ish) directed edge list + features + labels."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # preferential-attachment-flavoured endpoints: squaring skews to low ids
+    src = (jax.random.uniform(k1, (n_edges,)) ** 1.5 * (n_nodes - 1)).astype(jnp.int32)
+    dst = (jax.random.uniform(k2, (n_edges,)) * (n_nodes - 1)).astype(jnp.int32)
+    feats = jax.random.normal(k3, (n_nodes, d_feat)) * 0.5
+    labels = jax.random.randint(k4, (n_nodes,), 0, n_classes)
+    return {"senders": src, "receivers": dst, "features": feats, "labels": labels}

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the distance hot path (DESIGN.md SS2.1-2.2).
+
+distance_matrix: MXU-tiled brute-force/construction block (compute-bound)
+gather_topk:     scalar-prefetch fused neighbor gather+score (DMA-bound)
+ops:             jitted wrappers (interpret off-TPU, compiled on TPU)
+ref:             pure-jnp oracles every kernel is tested against
+"""
+
+from .ops import beam_gather_scores, query_distance_matrix

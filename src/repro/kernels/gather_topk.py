@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused neighbor gather + distance for the beam step.
+
+The beam-search inner loop gathers M neighbor rows by *runtime* index and
+scores them against the query.  On TPU the gather is the workload (random
+HBM access), so the kernel is built around **scalar-prefetched block
+indexing**: the neighbor-id array is prefetched to SMEM and the BlockSpec
+index_map uses it to drive the HBM->VMEM DMA of exactly the needed DB rows -
+the distance dot product + post-combine ride along for free (VPU epilogue
+while the next row's DMA is in flight).
+
+Grid: (B, M//rows_per_step). Each step DMAs `rows_per_step` candidate rows
+(rows_per_step=1 keeps the index_map exact; >1 requires contiguity, so the
+default is 1 - the DMA pipeline, not the MXU, is the bottleneck here by
+design; see DESIGN.md SS2.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.distances import POST_L2, POST_LINEAR, POST_NEG, POST_RENYI
+
+_TINY = 1e-30
+
+
+def _post_scalar(post_id: int, s, xb, qb, c0: float):
+    if post_id == POST_LINEAR:
+        return s + xb + qb
+    if post_id == POST_RENYI:
+        return jnp.log(jnp.maximum(s, _TINY)) * c0
+    if post_id == POST_NEG:
+        return -s
+    if post_id == POST_L2:
+        return xb - 2.0 * s + qb
+    raise ValueError(post_id)
+
+
+def _kernel(ids_ref, q_ref, x_ref, qb_ref, xb_ref, o_ref, *, post_id: int, c0: float):
+    # q_ref: (1, m) this query's rep; x_ref: (1, m) the DMA'd neighbor row
+    # xb_ref: (1, 1) that row's bias; o_ref: (1, 1) output distance.
+    del ids_ref  # indices are consumed by the BlockSpec index_map (DMA driver);
+    # validity masking (-1 padding -> +inf) happens in the wrapper epilogue.
+    s = jnp.sum(q_ref[0, :].astype(jnp.float32) * x_ref[0, :].astype(jnp.float32))
+    o_ref[0, 0] = _post_scalar(post_id, s, xb_ref[0, 0], qb_ref[0, 0], c0)
+
+
+@functools.partial(jax.jit, static_argnames=("post_id", "c0", "interpret"))
+def gather_scores(
+    ids,  # (B, M) int32 neighbor row indices (-1 padding)
+    q_rep,  # (B, m') prepped query reps
+    x_rep,  # (n, m') prepped DB reps
+    q_bias,  # (B,)
+    x_bias,  # (n,)
+    post_id: int,
+    c0: float = 0.0,
+    interpret: bool = True,
+):
+    """(B, M) f32 distances of gathered rows (inf where ids < 0)."""
+    B, M = ids.shape
+    n, m = x_rep.shape
+    safe_ids = jnp.where(ids >= 0, ids, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda b, j, ids_ref: (b, 0)),
+            pl.BlockSpec((1, m), lambda b, j, ids_ref: (ids_ref[b, j], 0)),
+            pl.BlockSpec((1, 1), lambda b, j, ids_ref: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, ids_ref: (ids_ref[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, j, ids_ref: (b, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, post_id=post_id, c0=c0),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, q_rep, x_rep, q_bias[:, None].astype(jnp.float32),
+      x_bias[:, None].astype(jnp.float32))
+    return jnp.where(ids >= 0, out, jnp.inf)

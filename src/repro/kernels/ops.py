@@ -1,0 +1,52 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``use_pallas`` selects the execution path:
+  * None (default): Pallas in interpret mode off-TPU, compiled on TPU —
+    i.e. the kernel body is always the code under test;
+  * False: the pure-jnp reference path (XLA fusion decides the schedule).
+
+Higher layers (brute_force, beam_search) call through these wrappers so the
+kernel and the jnp path are interchangeable per call site.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import Distance
+from . import ref as _ref
+from .distance_matrix import distance_matrix as _dm_kernel
+from .gather_topk import gather_scores as _gs_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def query_distance_matrix(dist: Distance, Q, X, use_pallas=None, block_q=256, block_x=256):
+    """(B, N) left-query distances d(X[i], Q[b]) for a single-matmul Distance."""
+    q_rep = dist.prep_right(Q)
+    x_rep = dist.prep_left(X)
+    q_bias = dist.bias_right(Q)
+    x_bias = dist.bias_left(X)
+    if use_pallas is False:
+        return _ref.distance_matrix_ref(q_rep, x_rep, q_bias, x_bias, dist.post_id, dist.c0)
+    return _dm_kernel(
+        q_rep, x_rep, q_bias, x_bias, dist.post_id, dist.c0,
+        block_q=block_q, block_x=block_x, interpret=not _on_tpu(),
+    )
+
+
+def beam_gather_scores(dist: Distance, ids, Q, X, use_pallas=None):
+    """(B, M) distances of neighbor rows ids under left-query convention."""
+    q_rep = dist.prep_right(Q)
+    x_rep = dist.prep_left(X)
+    q_bias = dist.bias_right(Q)
+    x_bias = dist.bias_left(X)
+    if use_pallas is False:
+        return _ref.gather_scores_ref(ids, q_rep, x_rep, q_bias, x_bias, dist.post_id, dist.c0)
+    return _gs_kernel(
+        ids, q_rep, x_rep, q_bias, x_bias, dist.post_id, dist.c0,
+        interpret=not _on_tpu(),
+    )

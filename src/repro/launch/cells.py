@@ -1,0 +1,663 @@
+"""The 40 assigned (architecture x input-shape) dry-run cells.
+
+Each cell knows how to build:
+  * the step function (train_step / prefill / decode / serve / retrieval),
+  * abstract inputs (ShapeDtypeStruct) with their NamedShardings,
+  * loop-iteration hints for the roofline parser (HLO while bodies are
+    counted once by XLA cost analysis - launch/roofline.py multiplies),
+  * analytic MODEL_FLOPS (6*N*D / 6*N_active*D for LMs, op counts elsewhere).
+
+Skips (mandated): ``long_500k`` needs sub-quadratic attention => skipped for
+pure full-attention archs (yi-34b, llama3.2-1b, phi3.5-moe, kimi-k2) and run
+for gemma3-12b (5:1 sliding-window pattern).  See DESIGN.md SS5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_family, get_module
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    skip_reason: Optional[str] = None
+    note: str = ""
+
+    @property
+    def cell_id(self) -> str:
+        return f"{self.arch}::{self.shape}"
+
+
+LM_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+GNN_SHAPES = ["full_graph_sm", "minibatch_lg", "ogb_products", "molecule"]
+RECSYS_SHAPES = ["train_batch", "serve_p99", "serve_bulk", "retrieval_cand"]
+
+_LM_KIND = {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}
+
+
+def list_cells() -> List[Cell]:
+    cells = []
+    for arch in ARCH_IDS:
+        fam = get_family(arch)
+        if fam == "lm":
+            cfg = get_config(arch)
+            for s in LM_SHAPES:
+                skip = None
+                if s == "long_500k" and cfg.full_attention:
+                    skip = ("pure full-attention arch: long_500k requires "
+                            "sub-quadratic attention (DESIGN.md SS5)")
+                cells.append(Cell(arch, s, _LM_KIND[s], skip_reason=skip))
+        elif fam == "gnn":
+            for s in GNN_SHAPES:
+                cells.append(Cell(arch, s, "train"))
+        elif fam == "recsys":
+            for s in RECSYS_SHAPES:
+                kind = ("train" if s == "train_batch"
+                        else "retrieval" if s == "retrieval_cand" else "serve")
+                cells.append(Cell(arch, s, kind))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _ns(mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _shard_tree(mesh, tree_sds, tree_specs):
+    """Attach NamedShardings from a spec pytree onto a SDS pytree."""
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        tree_sds, tree_specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-family cell builders: return dict with fn, args (SDS), hints
+# ---------------------------------------------------------------------------
+
+
+def _lm_train_cell(arch: str, mesh, seq: int, global_batch: int):
+    from repro.models import transformer
+    from repro.train.optimizer import (adafactor, adafactor_state_specs, adamw,
+                                       warmup_cosine)
+    from repro.train.train_step import lm_loss, make_train_step
+
+    cfg: LMConfig = get_config(arch)
+    dp = dp_axes(mesh)
+    # FSDP over ALL data-parallel axes (incl. "pod"): 1T-param states must
+    # shard across the full 512 chips on the multi-pod mesh
+    pspecs = transformer.param_specs(cfg, fsdp_axis=dp)
+    params_sds = jax.eval_shape(functools.partial(transformer.init_params, cfg),
+                                jax.random.PRNGKey(0))
+    params_sds = _shard_tree(mesh, params_sds, pspecs)
+
+    lr = warmup_cosine(3e-4, 2000, 100_000)
+    if cfg.is_moe and cfg.n_params() > 2e11:
+        opt = adafactor(lr)
+        ospecs = adafactor_state_specs(params_sds, pspecs)
+        opt_name = "adafactor"
+    else:
+        opt = adamw(lr)
+        ospecs = opt.state_specs(pspecs)
+        opt_name = "adamw"
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    opt_sds = _shard_tree(mesh, opt_sds, ospecs)
+
+    batch_sds = {
+        "tokens": _sds((global_batch, seq), jnp.int32, _ns(mesh, dp, None)),
+        "labels": _sds((global_batch, seq), jnp.int32, _ns(mesh, dp, None)),
+    }
+    # gradient accumulation bounds live activations: microbatch so that
+    # tokens/device/microbatch ~ 4k (saved residual stack = L x tok x d x
+    # ~4B must fit alongside params; EXPERIMENTS.md SSDry-run memory table)
+    dp_size = max(_axes_size(mesh, dp), 1)
+    tok_per_dev = global_batch * seq // dp_size
+    target = 4096 if cfg.d_model >= 3000 else 16384
+    accum = 1
+    while (tok_per_dev // accum > target and accum < 64
+           and global_batch % (accum * 2) == 0
+           and (global_batch // (accum * 2)) % dp_size == 0):
+        accum *= 2
+
+    loss = functools.partial(lm_loss, cfg=cfg, block_q=512, block_kv=512)
+    # bf16 grad accumulation for >=100B-param models: halves the dominant
+    # per-microbatch gradient-sync bytes (SSPerf A2)
+    accum_dtype = jnp.bfloat16 if cfg.n_params() > 1e11 else jnp.float32
+    step = make_train_step(lambda p, b: loss(p, b), opt, accum_steps=accum,
+                           accum_dtype=accum_dtype)
+
+    N = global_batch * seq
+    model_flops = 6.0 * N * cfg.n_active_params()
+    attn_flops = 12.0 * N * cfg.n_layers * cfg.n_heads * cfg.d_head * seq * 0.5
+    p_bytes = _tree_bytes(params_sds)
+    o_bytes = _tree_bytes(opt_sds)
+    # HBM traffic model (documented in EXPERIMENTS.md SSRoofline):
+    # params read fwd + read bwd + grads write/read + update write (4x),
+    # opt states read+write (2x), remat-saved carries + recompute streams
+    # (~8 tensor passes of (B,T,d) per layer), logits fwd+bwd (~6 passes).
+    act = 8.0 * cfg.n_layers * N * cfg.d_model * 2
+    logits_traffic = 6.0 * N * cfg.vocab_size * 2
+    analytic_bytes = 4.0 * p_bytes + 2.0 * o_bytes + act + logits_traffic
+    if cfg.is_moe:
+        m = cfg.moe
+        analytic_bytes += 4.0 * cfg.n_layers * N * m.top_k * cfg.d_model * 2
+    return {
+        "fn": step,
+        "args": (params_sds, opt_sds, batch_sds),
+        "donate": (0, 1),  # params, opt_state are consumed & rebuilt
+        "loop_hints": ([accum] if accum > 1 else []) + [cfg.n_layers],
+        "model_flops": model_flops,
+        "analytic_flops": model_flops + attn_flops,
+        "analytic_bytes": analytic_bytes,
+        "tokens": N,
+        "opt": opt_name,
+        "accum_steps": accum,
+        "param_bytes": p_bytes + o_bytes,
+    }
+
+
+def _serving_param_specs(cfg: LMConfig, mesh):
+    """Serving mode: TP-only sharding when bf16 params fit (no per-layer
+    FSDP weight all-gathers at inference - SSPerf B1); FSDP+TP otherwise
+    (kimi-k2's 2 TB cannot replicate across the data axis).
+    REPRO_SERVE_MODE=fsdp|tp overrides (SSPerf ablations)."""
+    import os
+
+    from repro.models import transformer
+
+    override = os.environ.get("REPRO_SERVE_MODE")
+    tp = mesh.shape["model"]
+    per_dev = cfg.n_params() * 2 / tp
+    # Ablation B1 (SSPerf) REFUTED the tp-only default: FSDP weight
+    # gathers were a minor term at 32k prefill while tp-only replication
+    # raised temp memory 3.6 -> 11.5 GiB/chip.  Default stays fsdp+tp;
+    # REPRO_SERVE_MODE=tp re-enables the ablation.
+    if override == "tp" and per_dev <= 6 * 2**30:
+        return transformer.param_specs(cfg, fsdp_axis=None), "tp-only"
+    dp = dp_axes(mesh)
+    return transformer.param_specs(cfg, fsdp_axis=dp), "fsdp+tp"
+
+
+def _lm_prefill_cell(arch: str, mesh, seq: int, batch: int):
+    from repro.models import transformer
+
+    cfg: LMConfig = get_config(arch)
+    dp = dp_axes(mesh)
+    pspecs, serve_mode = _serving_param_specs(cfg, mesh)
+    params_sds = _shard_tree(
+        mesh,
+        jax.eval_shape(functools.partial(transformer.init_params, cfg),
+                       jax.random.PRNGKey(0)),
+        pspecs,
+    )
+    tokens_sds = _sds((batch, seq), jnp.int32, _ns(mesh, dp, None))
+
+    def fn(params, tokens):
+        return transformer.prefill(params, tokens, cfg, block_q=512, block_kv=512)
+
+    cache_spec = transformer.kv_cache_specs(seq_axes=("model",), batch_axes=dp)
+    out_shardings = (
+        _ns(mesh, dp, None),  # logits (B, V)
+        jax.tree.map(lambda sp: NamedSharding(mesh, sp), cache_spec),
+    )
+    N = batch * seq
+    model_flops = 2.0 * N * cfg.n_active_params()
+    attn = 4.0 * N * cfg.n_layers * cfg.n_heads * cfg.d_head * seq * 0.5
+    p_bytes = _tree_bytes(params_sds)
+    kv_bytes = 2.0 * cfg.n_layers * N * cfg.n_kv_heads * cfg.d_head * 2
+    act = 4.0 * cfg.n_layers * N * cfg.d_model * 2
+    return {
+        "fn": fn,
+        "args": (params_sds, tokens_sds),
+        "out_shardings": out_shardings,
+        "loop_hints": [cfg.n_layers],
+        "model_flops": model_flops,
+        "analytic_flops": model_flops + attn,
+        "analytic_bytes": p_bytes + kv_bytes + act,
+        "tokens": N,
+        "serve_params": serve_mode,
+        "param_bytes": p_bytes,
+    }
+
+
+def _lm_decode_cell(arch: str, mesh, cache_len: int, batch: int):
+    from repro.models import transformer
+
+    cfg: LMConfig = get_config(arch)
+    dp = dp_axes(mesh)
+    # batch=1 (long_500k): batch unshardable -> widen seq sharding to
+    # ("data", "model") and replicate the batch dim (DESIGN.md SS5)
+    if batch % max(_axes_size(mesh, dp), 1) != 0 or batch == 1:
+        dp = ()
+        seq_axes = ("data", "model")
+    else:
+        seq_axes = ("model",)
+    pspecs, serve_mode = _serving_param_specs(cfg, mesh)
+    params_sds = _shard_tree(
+        mesh,
+        jax.eval_shape(functools.partial(transformer.init_params, cfg),
+                       jax.random.PRNGKey(0)),
+        pspecs,
+    )
+    cache_sds = jax.eval_shape(
+        functools.partial(transformer.init_kv_cache, cfg, batch, cache_len))
+    cache_specs = transformer.kv_cache_specs(seq_axes=seq_axes, batch_axes=dp)
+    cache_sds = _shard_tree(mesh, cache_sds, cache_specs)
+    tokens_sds = _sds((batch,), jnp.int32, _ns(mesh, dp or None))
+
+    def fn(params, cache, tokens):
+        return transformer.decode_step(params, cache, tokens, cfg, mesh=mesh,
+                                       seq_axes=seq_axes, dp=dp)
+
+    N = batch  # one token per sequence
+    model_flops = 2.0 * N * cfg.n_active_params()
+    attn = 4.0 * N * cfg.n_layers * cfg.n_heads * cfg.d_head * cache_len
+    kv_bytes = (2 * cfg.n_layers * batch * cache_len * cfg.n_kv_heads
+                * cfg.d_head * 2)
+    p_read = _active_param_bytes(cfg, batch)
+    return {
+        "fn": fn,
+        "args": (params_sds, cache_sds, tokens_sds),
+        "donate": (1,),  # cache is updated in place
+        "loop_hints": [cfg.n_layers],
+        "model_flops": model_flops,
+        "analytic_flops": model_flops + attn,
+        # decode HBM traffic: read active params once + read the whole KV
+        # cache once (+ small writes) - the classic decode memory wall
+        "analytic_bytes": p_read + kv_bytes,
+        "tokens": N,
+        "serve_params": serve_mode,
+        "param_bytes": _tree_bytes(params_sds),
+        "kv_bytes": kv_bytes,
+    }
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+GNN_SHAPE_DEFS = {
+    # n_nodes, n_edges, d_feat, n_classes
+    "full_graph_sm": dict(n_nodes=2_708, n_edges=10_556, d_feat=1_433, n_classes=7),
+    "minibatch_lg": dict(n_nodes=232_965, n_edges=114_615_892, d_feat=602,
+                         n_classes=41, batch_nodes=1_024, fanouts=(15, 10)),
+    "ogb_products": dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
+                         n_classes=47),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16, n_classes=2),
+}
+
+
+def _gnn_cell(arch: str, mesh, shape: str):
+    from repro.models import gnn
+    from repro.train.optimizer import adamw, warmup_cosine
+    from repro.train.train_step import make_train_step
+
+    mod = get_module(arch)
+    sdef = GNN_SHAPE_DEFS[shape]
+    cfg: GNNConfig = mod.with_shape(sdef["d_feat"], sdef["n_classes"])
+    dp = dp_axes(mesh)
+    pspecs = gnn.param_specs(cfg)
+    params_sds = _shard_tree(
+        mesh,
+        jax.eval_shape(functools.partial(gnn.init_params, cfg),
+                       jax.random.PRNGKey(0)),
+        pspecs,
+    )
+    opt = adamw(warmup_cosine(1e-2, 100, 10_000))
+    opt_sds = _shard_tree(mesh, jax.eval_shape(opt.init, params_sds),
+                          opt.state_specs(pspecs))
+
+    if shape == "molecule":
+        n_total = sdef["n_nodes"] * sdef["batch"]
+        e_total = sdef["n_edges"] * sdef["batch"]
+        batch_sds = {
+            "features": _sds((n_total, cfg.d_feat), jnp.float32, _ns(mesh, dp, None)),
+            "senders": _sds((e_total,), jnp.int32, _ns(mesh, dp)),
+            "receivers": _sds((e_total,), jnp.int32, _ns(mesh, dp)),
+            "graph_ids": _sds((n_total,), jnp.int32, _ns(mesh, dp)),
+            "graph_labels": _sds((sdef["batch"],), jnp.int32, _ns(mesh, dp)),
+        }
+
+        def loss(p, b):
+            return gnn.graph_classify_loss(p, b, cfg)
+
+        flops_fwd = _gcn_flops(cfg, n_total, e_total)
+    elif shape == "minibatch_lg":
+        b, fan = sdef["batch_nodes"], sdef["fanouts"]
+        e1 = b * fan[0]
+        e2 = e1 * fan[1]
+        n_sub = b + e1 + e2
+        batch_sds = {
+            # full feature/label tables stay resident (they are the "graph")
+            "features": _sds((sdef["n_nodes"], cfg.d_feat), jnp.float32,
+                             _ns(mesh, None, None)),
+            "labels": _sds((sdef["n_nodes"],), jnp.int32, _ns(mesh, None)),
+            "nodes": _sds((n_sub,), jnp.int32, _ns(mesh, None)),
+            "senders": _sds((e1 + e2,), jnp.int32, _ns(mesh, dp)),
+            "receivers": _sds((e1 + e2,), jnp.int32, _ns(mesh, dp)),
+        }
+
+        def loss(p, b_):
+            l, _ = gnn.sampled_forward(
+                p, b_["features"], b_["labels"],
+                {"nodes": b_["nodes"], "senders": b_["senders"],
+                 "receivers": b_["receivers"]},
+                cfg, n_seed=sdef["batch_nodes"])
+            return l, {"nll": l}
+
+        flops_fwd = _gcn_flops(cfg, sdef["n_nodes"], e1 + e2)
+    else:  # full-batch node classification
+        # pad the edge list to the DP-shard multiple (pad edges point at a
+        # masked sink node in the real data path; shapes only here)
+        dp_size = max(_axes_size(mesh, dp), 1)
+        e_pad = -(-sdef["n_edges"] // dp_size) * dp_size
+        batch_sds = {
+            "features": _sds((sdef["n_nodes"], cfg.d_feat), jnp.float32,
+                             _ns(mesh, None, None)),
+            "senders": _sds((e_pad,), jnp.int32, _ns(mesh, dp)),
+            "receivers": _sds((e_pad,), jnp.int32, _ns(mesh, dp)),
+            "labels": _sds((sdef["n_nodes"],), jnp.int32, _ns(mesh, None)),
+        }
+
+        def loss(p, b):
+            from repro.train.train_step import gnn_loss
+
+            return gnn_loss(p, b, cfg, edge_sharded=True)
+
+        flops_fwd = _gcn_flops(cfg, sdef["n_nodes"], sdef["n_edges"])
+
+    step = make_train_step(loss, opt)
+    # GCN HBM traffic: message gather + scatter per layer per pass (x3 for
+    # fwd+bwd), plus node features; params are negligible (kB-scale)
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    n_eff = sdef["n_nodes"] * sdef.get("batch", 1)
+    e_eff = sdef["n_edges"] * sdef.get("batch", 1)
+    if shape == "minibatch_lg":
+        e_eff = sdef["batch_nodes"] * sdef["fanouts"][0] * (1 + sdef["fanouts"][1])
+    abytes = sum(3.0 * (2 * e_eff * dims[i] + 2 * n_eff * dims[i]) * 4
+                 for i in range(cfg.n_layers))
+    return {
+        "fn": step,
+        "args": (params_sds, opt_sds, batch_sds),
+        "donate": (0, 1),
+        "loop_hints": [],
+        "model_flops": 3.0 * flops_fwd,  # fwd + ~2x bwd
+        "analytic_flops": 3.0 * flops_fwd,
+        "analytic_bytes": abytes,
+        "tokens": sdef.get("batch_nodes", sdef["n_nodes"]),
+        "param_bytes": _tree_bytes(params_sds) + _tree_bytes(opt_sds),
+    }
+
+
+def _gcn_flops(cfg: GNNConfig, n_nodes: int, n_edges: int) -> float:
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    f = 0.0
+    for i in range(cfg.n_layers):
+        f += 2.0 * n_edges * dims[i]  # SpMM (gather+scatter-add)
+        f += 2.0 * n_nodes * dims[i] * dims[i + 1]  # dense
+    return f
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPE_DEFS = {
+    "train_batch": dict(batch=65_536),
+    "serve_p99": dict(batch=512),
+    "serve_bulk": dict(batch=262_144),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000),
+}
+
+
+def _recsys_batch_sds(cfg: RecsysConfig, mesh, batch: int, with_label: bool):
+    dp = dp_axes(mesh)
+    if batch % max(_axes_size(mesh, dp), 1) != 0:
+        dp = None  # batch=1 (retrieval_cand query row): replicate
+    out = {
+        "sparse_ids": _sds((batch, cfg.n_sparse), jnp.int32, _ns(mesh, dp, None)),
+    }
+    if cfg.n_dense:
+        out["dense"] = _sds((batch, cfg.n_dense), jnp.float32, _ns(mesh, dp, None))
+    if cfg.seq_len:
+        out["history"] = _sds((batch, cfg.seq_len), jnp.int32, _ns(mesh, dp, None))
+        out["hist_len"] = _sds((batch,), jnp.int32, _ns(mesh, dp))
+    if with_label:
+        out["label"] = _sds((batch,), jnp.float32, _ns(mesh, dp))
+    return out
+
+
+def _recsys_flops(cfg: RecsysConfig, batch: int) -> float:
+    d = cfg.embed_dim
+    f = 0.0
+    if cfg.interaction == "self-attn":
+        F = cfg.n_sparse
+        da = cfg.d_attn
+        for i in range(cfg.n_attn_layers):
+            d_in = d if i == 0 else da
+            f += 2.0 * batch * F * d_in * da * 4  # q,k,v,res projections
+            f += 2.0 * batch * F * F * da * 2  # scores + weighted sum
+        f += 2.0 * batch * (F * da)
+    elif cfg.interaction == "target-attn":
+        T = cfg.seq_len
+        dims = (4 * d,) + tuple(cfg.attn_mlp_dims) + (1,)
+        per_tok = sum(2.0 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        f += batch * T * per_tok
+        mdims = (2 * d + (cfg.n_sparse - 1) * d + cfg.n_dense,) + tuple(cfg.mlp_dims) + (1,)
+        f += batch * sum(2.0 * mdims[i] * mdims[i + 1] for i in range(len(mdims) - 1))
+    elif cfg.interaction == "cross":
+        x0 = cfg.n_dense + cfg.n_sparse * d
+        f += 2.0 * batch * x0 * x0 * cfg.n_cross_layers
+        mdims = (x0,) + tuple(cfg.mlp_dims) + (1,)
+        f += batch * sum(2.0 * mdims[i] * mdims[i + 1] for i in range(len(mdims) - 1))
+    elif cfg.interaction == "dot":
+        fu = cfg.n_sparse // 2
+        for dims, nf in ((cfg.tower_mlp_dims, fu), (cfg.tower_mlp_dims, cfg.n_sparse - fu)):
+            full = (nf * d,) + tuple(dims)
+            f += batch * sum(2.0 * full[i] * full[i + 1] for i in range(len(full) - 1))
+    # embedding gather bytes dominate; flops negligible but count the reduce
+    f += 2.0 * batch * cfg.n_sparse * d
+    return f
+
+
+def _recsys_cell(arch: str, mesh, shape: str):
+    from repro.models import recsys
+    from repro.train.optimizer import adamw, warmup_cosine
+    from repro.train.train_step import make_train_step, recsys_loss
+
+    cfg: RecsysConfig = get_config(arch)
+    sdef = RECSYS_SHAPE_DEFS[shape]
+    dp = dp_axes(mesh)
+    pspecs = recsys.param_specs(cfg)
+    params_sds = _shard_tree(
+        mesh,
+        jax.eval_shape(functools.partial(recsys.init_params, cfg),
+                       jax.random.PRNGKey(0)),
+        pspecs,
+    )
+
+    table_bytes = _tree_bytes({"t": params_sds["table"]})
+    dense_p_bytes = _tree_bytes(params_sds) - table_bytes
+    gather_b = lambda b: 3.0 * b * (cfg.n_sparse + cfg.seq_len) * cfg.embed_dim * 4
+
+    if shape == "train_batch":
+        batch = sdef["batch"]
+        opt = adamw(warmup_cosine(1e-3, 1000, 300_000))
+        opt_sds = _shard_tree(mesh, jax.eval_shape(opt.init, params_sds),
+                              opt.state_specs(pspecs))
+        batch_sds = _recsys_batch_sds(cfg, mesh, batch, with_label=True)
+        step = make_train_step(lambda p, b: recsys_loss(p, b, cfg), opt)
+        # NOTE: AdamW here applies DENSE updates to the embedding table
+        # (grad + mu + nu + param, read+write) - faithful to the
+        # implementation; sparse/lazy embedding optimizers are a recorded
+        # perf iteration (EXPERIMENTS.md SSPerf).
+        abytes = (8.0 * _tree_bytes(params_sds) + 2.0 * _tree_bytes(opt_sds)
+                  + gather_b(batch) + 6.0 * batch * cfg.embed_dim * cfg.n_sparse * 4)
+        return {
+            "fn": step,
+            "args": (params_sds, opt_sds, batch_sds),
+            "donate": (0, 1),
+            "loop_hints": [],
+            "model_flops": 3.0 * _recsys_flops(cfg, batch),
+            "analytic_flops": 3.0 * _recsys_flops(cfg, batch),
+            "analytic_bytes": abytes,
+            "tokens": batch,
+            "param_bytes": _tree_bytes(params_sds) + _tree_bytes(opt_sds),
+            "embed_gather_bytes": gather_b(batch),
+        }
+
+    if shape in ("serve_p99", "serve_bulk"):
+        batch = sdef["batch"]
+        batch_sds = _recsys_batch_sds(cfg, mesh, batch, with_label=False)
+
+        if cfg.interaction == "dot":
+            def fn(params, batch_):
+                u, it = recsys.tower_embeddings(params, batch_, cfg)
+                return jnp.sum(u * it, axis=-1)
+        else:
+            def fn(params, batch_):
+                return recsys.forward(params, batch_, cfg)
+
+        return {
+            "fn": fn,
+            "args": (params_sds, batch_sds),
+            "loop_hints": [],
+            "model_flops": _recsys_flops(cfg, batch),
+            "analytic_flops": _recsys_flops(cfg, batch),
+            "analytic_bytes": (dense_p_bytes + gather_b(batch) / 3.0
+                               + 2.0 * batch * cfg.embed_dim * cfg.n_sparse * 4),
+            "tokens": batch,
+            "param_bytes": _tree_bytes(params_sds),
+            "embed_gather_bytes": batch * cfg.n_sparse * cfg.embed_dim * 4,
+        }
+
+    # retrieval_cand
+    nc = sdef["n_candidates"]
+    if cfg.interaction == "dot":
+        # the paper-integrated path: 1 user-tower query vs 10^6 candidate
+        # embeddings, served by the distributed retrieval engine:
+        # per-shard local top-k + tiny merge (scatter-gather; DESIGN.md
+        # SS2.4) instead of gathering full score rows (SSPerf, C1)
+        d_emb = cfg.tower_mlp_dims[-1]
+        batch_sds = _recsys_batch_sds(cfg, mesh, 1, with_label=False)
+        db_axes = dp + ("model",)
+        nc_pad = -(-nc // 512) * 512  # shard-divisible corpus (pad rows
+        # carry +inf sentinel scores in the real serving path)
+        cand_sds = _sds((nc_pad, d_emb), jnp.float32, _ns(mesh, db_axes, None))
+
+        def fn(params, batch_, candidates):
+            from repro.core.distances import neg_inner_product
+            from repro.core.distributed import sharded_knn_scan
+
+            u, _ = recsys.tower_embeddings(params, batch_, cfg)
+            d, ids = sharded_knn_scan(mesh, neg_inner_product(), u,
+                                      candidates, 100, db_axes=db_axes)
+            return d, ids
+
+        flops = 2.0 * nc * d_emb
+        args = (params_sds, batch_sds, cand_sds)
+    else:
+        # ranking models bulk-score 10^6 candidate rows (user fields tiled)
+        batch_sds = _recsys_batch_sds(cfg, mesh, nc, with_label=False)
+
+        def fn(params, batch_):
+            scores = recsys.forward(params, batch_, cfg)
+            neg, ids = jax.lax.top_k(-scores, 100)
+            return -neg, ids
+
+        flops = _recsys_flops(cfg, nc)
+        args = (params_sds, batch_sds)
+
+    cand_bytes = (nc * cfg.tower_mlp_dims[-1] * 4 if cfg.interaction == "dot"
+                  else gather_b(nc) / 3.0 + dense_p_bytes)
+    return {
+        "fn": fn,
+        "args": args,
+        "loop_hints": [],
+        "model_flops": flops,
+        "analytic_flops": flops,
+        "analytic_bytes": cand_bytes,
+        "tokens": nc,
+        "param_bytes": _tree_bytes(params_sds),
+    }
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+LM_SHAPE_DEFS = {
+    "train_4k": dict(seq=4_096, global_batch=256),
+    "prefill_32k": dict(seq=32_768, batch=32),
+    "decode_32k": dict(cache=32_768, batch=128),
+    "long_500k": dict(cache=524_288, batch=1),
+}
+
+
+def build_cell(cell: Cell, mesh) -> Dict[str, Any]:
+    if cell.skip_reason:
+        raise ValueError(f"cell {cell.cell_id} is skipped: {cell.skip_reason}")
+    fam = get_family(cell.arch)
+    if fam == "lm":
+        d = LM_SHAPE_DEFS[cell.shape]
+        if cell.kind == "train":
+            return _lm_train_cell(cell.arch, mesh, d["seq"], d["global_batch"])
+        if cell.kind == "prefill":
+            return _lm_prefill_cell(cell.arch, mesh, d["seq"], d["batch"])
+        return _lm_decode_cell(cell.arch, mesh, d["cache"], d["batch"])
+    if fam == "gnn":
+        return _gnn_cell(cell.arch, mesh, cell.shape)
+    return _recsys_cell(cell.arch, mesh, cell.shape)
+
+
+def _active_param_bytes(cfg: LMConfig, batch: int) -> float:
+    """Per-decode-step parameter bytes read: dense params fully, MoE expert
+    weights scaled by the expected per-step expert coverage."""
+    total = cfg.n_params() * 2.0  # bf16
+    if not cfg.is_moe:
+        return total
+    m = cfg.moe
+    expert_part = 3.0 * cfg.d_model * m.d_ff_expert * m.n_experts * cfg.n_layers * 2.0
+    frac = min(1.0, batch * m.top_k / m.n_experts)
+    return total - expert_part + expert_part * frac
+
+
+def _tree_bytes(tree) -> int:
+    return sum(
+        int(jnp.dtype(l.dtype).itemsize) * int(functools.reduce(lambda a, b: a * b, l.shape, 1))
+        for l in jax.tree.leaves(tree)
+        if hasattr(l, "shape")
+    )

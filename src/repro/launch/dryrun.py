@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS") or "--xla_force_host_platform_device_count=512"  # noqa: E501,E402 - MUST precede any jax import (device count locks at first init)
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell and both production meshes -
+(16,16) ("data","model") and (2,16,16) ("pod","data","model") -
+
+    jit(step).lower(*abstract_args).compile()
+
+must succeed; we record memory_analysis() (fit proof), cost_analysis()
+(FLOPs/bytes), and the parsed collective schedule into
+artifacts/dryrun/<cell>__<mesh>.json, which EXPERIMENTS.md SSDry-run and
+SSRoofline read.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch yi-34b
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both          # all 40
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.launch.cells import Cell, build_cell, list_cells
+from repro.launch.mesh import HBM_PER_CHIP, make_production_mesh
+from repro.launch.roofline import build_roofline, parse_collectives
+from repro.sharding.api import use_mesh
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def run_cell(cell: Cell, mesh, mesh_name: str, art_dir: str):
+    cell_id = f"{cell.arch}__{cell.shape}__{mesh_name}".replace("/", "-")
+    out_path = os.path.join(art_dir, cell_id + ".json")
+    rec = {
+        "arch": cell.arch, "shape": cell.shape, "mesh": mesh_name,
+        "kind": cell.kind, "n_chips": int(mesh.size),
+    }
+    if cell.skip_reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip_reason
+        _write(out_path, rec)
+        print(f"[skip] {cell_id}: {cell.skip_reason}")
+        return rec
+
+    t0 = time.time()
+    try:
+        with use_mesh(mesh):
+            built = build_cell(cell, mesh)
+            jit_kw = {}
+            if built.get("out_shardings") is not None:
+                jit_kw["out_shardings"] = built["out_shardings"]
+            if built.get("donate"):
+                jit_kw["donate_argnums"] = built["donate"]
+            jitted = jax.jit(built["fn"], **jit_kw)
+            lowered = jitted.lower(*built["args"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo, built.get("loop_hints"))
+
+        hints = built.get("loop_hints") or []
+        loop_mult = 1
+        for h in hints:
+            loop_mult *= max(h, 1)
+        # HLO while bodies are counted once by cost analysis (verified);
+        # numbers below are PER-DEVICE.  flops/bytes are scaled by the loop
+        # hint as a coarse correction and reported as diagnostics; roofline
+        # terms use the analytic models (exact for our own model defs).
+        raw_flops = float(cost.get("flops", 0.0))
+        raw_bytes = float(cost.get("bytes accessed", 0.0))
+        hlo_flops_adj = raw_flops * loop_mult
+        hlo_bytes_adj = raw_bytes * loop_mult
+
+        rl = build_roofline(
+            model_flops=built["model_flops"],
+            hlo_bytes_per_chip=built.get("analytic_bytes", hlo_bytes_adj * mesh.size)
+            / mesh.size,
+            collective_totals=coll,
+            n_chips=int(mesh.size),
+            analytic_flops=built.get("analytic_flops"),
+        )
+
+        arg_b = int(getattr(mem, "argument_size_in_bytes", 0) or 0)
+        temp_b = int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+        out_b = int(getattr(mem, "output_size_in_bytes", 0) or 0)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            opt=built.get("opt"),
+            tokens=built.get("tokens"),
+            model_flops=built["model_flops"],
+            analytic_flops=built.get("analytic_flops"),
+            hlo_flops_raw=raw_flops,
+            hlo_flops_adj=hlo_flops_adj,
+            hlo_bytes_raw=raw_bytes,
+            hlo_bytes_adj=hlo_bytes_adj,
+            analytic_bytes=built.get("analytic_bytes"),
+            loop_mult=loop_mult,
+            # MODEL_FLOPS / compiled-total (HLO numbers are per device)
+            useful_flops_ratio=(built["model_flops"]
+                                / (hlo_flops_adj * mesh.size)
+                                if hlo_flops_adj else None),
+            collectives={k: v for k, v in coll.items()},
+            memory_analysis={
+                "argument_bytes": arg_b,
+                "output_bytes": out_b,
+                "temp_bytes": temp_b,
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0) or 0),
+                "total_bytes": arg_b + temp_b + out_b,
+                "hbm_per_chip": HBM_PER_CHIP,
+                "fits_raw": bool(arg_b + temp_b + out_b <= HBM_PER_CHIP),
+                # XLA:CPU upcasts bf16 buffers to f32 (verified via HLO
+                # convert()s in every probe); TPU stores bf16 natively, so
+                # the TPU-true temp is ~0.55x the CPU-reported number.
+                "tpu_true_estimate_bytes": int(arg_b + 0.55 * temp_b),
+                "fits": bool(arg_b + 0.55 * temp_b <= HBM_PER_CHIP),
+            },
+            param_state_bytes_global=built.get("param_bytes"),
+            roofline=rl.as_dict(),
+        )
+        print(f"[ok]   {cell_id}: compile={t_compile:.0f}s "
+              f"mem/chip={(arg_b + temp_b) / 2**30:.2f}GiB "
+              f"dominant={rl.dominant} bound={rl.bound_s * 1e3:.2f}ms")
+    except Exception as e:  # noqa: BLE001 - record and continue
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[FAIL] {cell_id}: {type(e).__name__}: {str(e)[:200]}")
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="run only this arch")
+    ap.add_argument("--shape", default=None, help="run only this shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both", "debug"])
+    ap.add_argument("--art-dir", default=os.path.abspath(ART_DIR))
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+    if args.mesh == "debug":  # fast iteration: 4x4 over 16 host devices
+        from repro.launch.mesh import make_debug_mesh
+
+        meshes.append(("debug_4x4", make_debug_mesh((4, 4))))
+
+    cells = [c for c in list_cells()
+             if (args.arch is None or c.arch == args.arch)
+             and (args.shape is None or c.shape == args.shape)]
+    print(f"dry-run: {len(cells)} cells x {len(meshes)} meshes "
+          f"({jax.device_count()} devices)")
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, mesh in meshes:
+        for cell in cells:
+            rec = run_cell(cell, mesh, mesh_name, args.art_dir)
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skipped"
+            n_fail += rec["status"] == "error"
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

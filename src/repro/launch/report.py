@@ -1,0 +1,113 @@
+"""Render the dry-run / roofline tables for EXPERIMENTS.md from artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh single_pod_16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_records(art_dir: str, mesh: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TiB", 2**40), ("GiB", 2**30), ("MiB", 2**20)):
+        if x >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(recs, show_skipped=True):
+    lines = [
+        "| arch | shape | kind | compute | memory | collective | dominant |"
+        " mem/chip (tpu-est) | fits | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            if show_skipped:
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | - | - | - | - | skipped |"
+                    f" - | - | {r['skip_reason'][:40]}... |")
+            continue
+        if r["status"] == "error":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['kind']} "
+                         f"| ERROR | | | | | | {r['error'][:50]} |")
+            continue
+        rl = r["roofline"]
+        mem = r["memory_analysis"]
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} "
+            f"| {fmt_s(rl['collective_s'])} | **{rl['dominant']}** "
+            f"| {fmt_b(mem['tpu_true_estimate_bytes'])} "
+            f"| {'Y' if mem['fits'] else 'N'} "
+            f"| {ratio:.2f} |" if ratio else
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} "
+            f"| {fmt_s(rl['collective_s'])} | **{rl['dominant']}** "
+            f"| {fmt_b(mem['tpu_true_estimate_bytes'])} "
+            f"| {'Y' if mem['fits'] else 'N'} | - |"
+        )
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(recs):
+    """worst roofline fraction, most collective-bound, most paper-representative."""
+    ok = [r for r in recs if r["status"] == "ok"]
+
+    def frac(r):  # useful compute / bound time (roofline fraction proxy)
+        rl = r["roofline"]
+        bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        return rl["compute_s"] / bound if bound else 1.0
+
+    worst = min(ok, key=frac)
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["compute_s"], 1e-12))
+    paper = next((r for r in ok if r["arch"] == "two-tower-retrieval"
+                  and r["shape"] == "retrieval_cand"), ok[0])
+    return {"worst_fraction": worst, "most_collective": coll,
+            "paper_representative": paper}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art-dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single_pod_16x16")
+    args = ap.parse_args()
+    recs = load_records(args.art_dir, args.mesh)
+    if not recs:
+        raise SystemExit(f"no records for mesh {args.mesh} in {args.art_dir}")
+    print(f"## Roofline - {args.mesh} ({len(recs)} cells)\n")
+    print(roofline_table(recs))
+    picks = pick_hillclimb_cells(recs)
+    print("\nhillclimb picks:")
+    for why, r in picks.items():
+        print(f"  {why}: {r['arch']}::{r['shape']} "
+              f"(dominant={r['roofline']['dominant']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in SECONDS (EXPERIMENTS.md SSRoofline):
+
+    compute    = FLOPs / (chips x 197e12)           [bf16 MXU peak, v5e]
+    memory     = HBM bytes / (chips x 819e9)
+    collective = ICI bytes / (chips x 50e9)
+
+Sources & corrections:
+  * ``compiled.cost_analysis()`` counts HLO while bodies ONCE (verified on
+    this jax build) -> flops/bytes from the layer-scan are scaled by the
+    cell's loop hints using the collective-metadata trick below, and the
+    compute term is cross-checked against analytic MODEL_FLOPS.
+  * collective bytes are parsed from ``compiled.as_text()``: every
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute instruction, with per-algorithm wire factors
+    (ring all-reduce 2(g-1)/g, gather/scatter (g-1)/g) and the replica
+    group size parsed from ``replica_groups=[GxN]``.  Instructions whose
+    op_name metadata places them inside a while body are multiplied by the
+    loop hint ("/while/" scope = layer scan).
+  * shapes in SPMD HLO are PER-DEVICE, so parsed bytes are already
+    per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(1))  # iota groups [G,N]<=[...]: G = group size
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2
+
+
+_WIRE_FACTOR = {
+    # bytes-on-wire per device as a multiple of the RESULT shape bytes
+    "all-gather": lambda g: (g - 1) / g,
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1),  # result is 1/g of operand
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def parse_collectives(hlo_text: str, loop_hints=None):
+    """Sum per-device ICI bytes by collective type.
+
+    ``loop_hints`` is an ORDERED list of trip counts, outermost first (e.g.
+    [accum_steps, n_layers] for an accumulating train step).  A collective
+    whose op_name scope contains k "/while" segments executes
+    prod(hints[:k]) times (k clipped to len(hints); deeper loops such as the
+    flash-attention q-block map rarely carry collectives - approximation
+    documented in EXPERIMENTS.md SSRoofline).
+    """
+    if isinstance(loop_hints, dict):  # legacy form {"while": L}
+        loop_hints = list(loop_hints.values())
+    loop_hints = [h for h in (loop_hints or []) if h and h > 1]
+    totals: Dict[str, float] = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # result type string = text between '=' and the op name
+        lhs = line.split("=", 1)[1]
+        result_text = lhs[: lhs.find(op)]
+        nbytes = _shape_bytes(result_text)
+        g = _group_size(line)
+        wire = _WIRE_FACTOR[op](g) * nbytes
+        om = re.search(r'op_name="([^"]*)"', line)
+        scope = om.group(1) if om else ""
+        depth = min(scope.count("/while"), len(loop_hints))
+        mult = 1
+        for h in loop_hints[:depth]:
+            mult *= h
+        totals[op] = totals.get(op, 0.0) + wire * mult
+        count += 1
+    totals["_n_instructions"] = count
+    return totals
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    ici_bytes_per_chip: float
+    n_chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.ici_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self):
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "ici_bytes_per_chip": self.ici_bytes_per_chip,
+        }
+
+
+def build_roofline(*, model_flops: float, hlo_bytes_per_chip: float,
+                   collective_totals: Dict[str, float], n_chips: int,
+                   analytic_flops: Optional[float] = None) -> Roofline:
+    """Compute term uses max(analytic, model) flops distributed over chips -
+    analytic counts attention; MODEL_FLOPS is the 6ND convention."""
+    flops = max(analytic_flops or 0.0, model_flops) / n_chips
+    ici = sum(v for k, v in collective_totals.items() if not k.startswith("_"))
+    return Roofline(flops, hlo_bytes_per_chip, ici, n_chips)

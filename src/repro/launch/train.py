@@ -1,0 +1,121 @@
+"""Training launcher: config -> data pipeline -> jitted step -> checkpoints.
+
+Runs the REAL loop (used by examples/train_lm.py for the ~100M-param
+end-to-end driver on CPU and, with ``--mesh``, under a device mesh).
+Fault tolerance wiring (DESIGN.md SS7): CheckpointManager.resume() restores
+(params, opt_state) and the data cursor; the pipeline regenerates batch
+``step`` deterministically, so a killed run continues bit-exact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_family, get_smoke_config
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import recsys_batch
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import adafactor, adamw, warmup_cosine
+from repro.train.train_step import lm_loss, make_train_step, recsys_loss
+
+
+def lm_batch_fn(cfg, batch: int, seq: int, seed: int = 0):
+    def make(step: int):
+        k = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        u = jax.random.uniform(k, (batch, seq + 1))
+        toks = (u * u * (cfg.vocab_size - 1)).astype(jnp.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    return make
+
+
+def train_lm(cfg, *, steps: int = 200, batch: int = 8, seq: int = 128,
+             ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+             log_every: int = 10, peak_lr: float = 3e-4, block: int = 64):
+    """Train an LM config; returns the metrics history."""
+    from repro.models import transformer
+
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    opt = adamw(warmup_cosine(peak_lr, max(steps // 20, 5), steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(
+        lambda p, b: lm_loss(p, b, cfg, block_q=block, block_kv=block), opt))
+
+    start = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = ckpt_lib.CheckpointManager(ckpt_dir, keep=2, every=ckpt_every)
+        (state, last) = mgr.resume({"params": params, "opt": opt_state})
+        if last >= 0:
+            params, opt_state = state["params"], state["opt"]
+            start = last + 1
+            print(f"resumed from step {last}")
+
+    pipe = iter(DataPipeline(lm_batch_fn(cfg, batch, seq), start_step=start))
+    history = []
+    t0 = time.time()
+    for _ in range(start, steps):
+        step, batch_data = next(pipe)
+        params, opt_state, metrics = step_fn(params, opt_state, batch_data)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            tok_s = batch * seq * (step - start + 1) / max(time.time() - t0, 1e-9)
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} tok/s {tok_s:,.0f}")
+            history.append({"step": step, "loss": loss})
+        if mgr:
+            mgr.maybe_save(step, {"params": params, "opt": opt_state})
+    return params, history
+
+
+def train_recsys(cfg, *, steps: int = 100, batch: int = 256,
+                 log_every: int = 10, peak_lr: float = 1e-3):
+    from repro.models import recsys
+
+    params = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw(warmup_cosine(peak_lr, 10, steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(lambda p, b: recsys_loss(p, b, cfg), opt))
+
+    history = []
+    for step in range(steps):
+        b = recsys_batch(jax.random.fold_in(jax.random.PRNGKey(1), step),
+                         batch=batch, n_dense=cfg.n_dense,
+                         vocab_sizes=cfg.vocab_sizes, seq_len=cfg.seq_len)
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        if step % log_every == 0 or step == steps - 1:
+            history.append({"step": step, "loss": float(metrics["loss"])})
+            print(f"step {step:4d} loss {history[-1]['loss']:.4f}")
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    fam = get_family(args.arch)
+    if fam == "lm":
+        train_lm(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                 ckpt_dir=args.ckpt_dir)
+    elif fam == "recsys":
+        train_recsys(cfg, steps=args.steps, batch=args.batch)
+    else:
+        raise SystemExit(f"use examples/ for family {fam}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,330 @@
+"""Transformer building blocks (pure-pytree modules, no flax).
+
+Memory-critical choice: attention is computed BLOCKWISE (flash-attention
+schedule in pure JAX - lax.scan over KV blocks with running max/denominator),
+so (T, T) score matrices never materialise.  Causal and sliding-window
+predicates are evaluated per (q-block, kv-block) tile on the fly; fully
+masked tiles still compute (static shapes) but the working set stays
+O(T x block).  This is what lets the 32k-prefill dry-runs fit in HBM.
+
+GQA grouping: q head h uses kv head (h % n_kv) - an interleaved relabeling
+that keeps any head count TP-shardable (DESIGN.md SS5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in, d_out, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, d_head); positions: (..., T) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (d_head/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., T, 1, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _tile_mask(q_pos, kv_pos, causal: bool, window):
+    """(bq, bk) bool mask for one tile.
+
+    ``window`` may be a Python int or a TRACED scalar (per-layer local/global
+    selection inside a scan); window <= 0 => no window limit.
+    """
+    diff = q_pos[:, None] - kv_pos[None, :]
+    m = jnp.ones(diff.shape, bool)
+    if causal:
+        m &= diff >= 0
+    w = jnp.asarray(window)
+    m &= (w <= 0) | (diff < w)
+    return m
+
+
+def _pad_blocks(q, k, v, block_q, block_kv):
+    B, Tq, Hq, dh = q.shape
+    Tk = k.shape[1]
+    block_q = min(block_q, Tq)
+    block_kv = min(block_kv, Tk)
+    pq = (-Tq) % block_q
+    pk = (-Tk) % block_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    return q, k, v, block_q, block_kv
+
+
+def _flash_fwd_impl(q, k, v, window, causal, block_q, block_kv, q_offset):
+    """Tiled forward. Returns (out (B,Tq,Hq,dh), lse (nq,B,g,Hkv,bq) f32)."""
+    B, Tq, Hq, dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    scale = dh**-0.5
+    qp, kp, vp, bq_, bk_ = _pad_blocks(q, k, v, block_q, block_kv)
+    nq, nk = qp.shape[1] // bq_, kp.shape[1] // bk_
+
+    qb = qp.reshape(B, nq, bq_, g, Hkv, dh)
+    kb = kp.reshape(B, nk, bk_, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, bk_, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    q_positions = q_offset + jnp.arange(nq * bq_).reshape(nq, bq_)
+    kv_positions = jnp.arange(nk * bk_).reshape(nk, bk_)
+    kv_valid = kv_positions < Tk
+
+    def per_qblock(args):
+        qi, q_blk = args
+        q_pos = q_positions[qi]
+
+        def kv_step(carry, inputs):
+            m_run, l_run, acc = carry
+            kv_blk, v_blk, kv_pos, valid = inputs
+            s = jnp.einsum("bqghd,bkhd->bghqk", q_blk.astype(jnp.float32),
+                           kv_blk.astype(jnp.float32)) * scale
+            mask = _tile_mask(q_pos, kv_pos, causal, window) & valid[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bghqk,bkhd->bghqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, g, Hkv, bq_), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, g, Hkv, bq_), jnp.float32)
+        a0 = jnp.zeros((B, g, Hkv, bq_, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kb, vb, kv_positions, kv_valid))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # -inf rows stay ~NEG_INF
+        return out.transpose(0, 3, 1, 2, 4), lse  # (B,bq,g,Hkv,dh), (B,g,Hkv,bq)
+
+    outs, lses = jax.lax.map(per_qblock,
+                             (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4, 5)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq_, Hq, dh)
+    return out[:, :Tq].astype(q.dtype), lses
+
+
+def _flash_bwd_impl(q, k, v, window, lse, dout, causal, block_q, block_kv,
+                    q_offset):
+    """Flash-attention backward: recompute tiles, never store (T, T) probs."""
+    B, Tq, Hq, dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = dh**-0.5
+    qp, kp, vp, bq_, bk_ = _pad_blocks(q, k, v, block_q, block_kv)
+    dout_p = jnp.pad(dout, ((0, 0), (0, qp.shape[1] - Tq), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // bq_, kp.shape[1] // bk_
+
+    qb = qp.reshape(B, nq, bq_, g, Hkv, dh).transpose(1, 0, 2, 3, 4, 5)
+    dob = dout_p.reshape(B, nq, bq_, g, Hkv, dh).transpose(1, 0, 2, 3, 4, 5)
+    kb = kp.reshape(B, nk, bk_, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, bk_, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    q_positions = q_offset + jnp.arange(nq * bq_).reshape(nq, bq_)
+    kv_positions = jnp.arange(nk * bk_).reshape(nk, bk_)
+    kv_valid = kv_positions < Tk
+
+    # delta[i] = rowsum(dout * out); reconstruct out-row contribution via
+    # the standard identity using saved lse: delta = sum_d dout .out - we
+    # recompute out rows blockwise instead of saving out (saves one (B,T,H,
+    # dh) residual): delta_i = sum_k p_ik (dout_i . v_k) done inside tiles.
+    # Cheaper standard form: save out? We recompute delta in a first sweep.
+    def delta_qblock(args):
+        qi, q_blk, do_blk = args
+        q_pos = q_positions[qi]
+        lse_i = lse[qi]
+
+        def kv_step(acc, inputs):
+            kv_blk, v_blk, kv_pos, valid = inputs
+            s = jnp.einsum("bqghd,bkhd->bghqk", q_blk.astype(jnp.float32),
+                           kv_blk.astype(jnp.float32)) * scale
+            mask = _tile_mask(q_pos, kv_pos, causal, window) & valid[None, :]
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lse_i[..., None]), 0.0)
+            dov = jnp.einsum("bqghd,bkhd->bghqk", do_blk.astype(jnp.float32),
+                             v_blk.astype(jnp.float32))
+            return acc + jnp.sum(p * dov, axis=-1), None
+
+        acc0 = jnp.zeros((B, g, Hkv, bq_), jnp.float32)
+        delta, _ = jax.lax.scan(kv_step, acc0, (kb, vb, kv_positions, kv_valid))
+        return delta
+
+    deltas = jax.lax.map(delta_qblock, (jnp.arange(nq), qb, dob))  # (nq,B,g,Hkv,bq)
+
+    def kv_block(dq_acc, inputs):
+        kj, k_blk, v_blk = inputs
+        kv_pos = kv_positions[kj]
+        valid = kv_valid[kj]
+
+        def q_step(carry, inputs_i):
+            dk_j, dv_j = carry
+            qi, q_blk, do_blk, lse_i, delta_i = inputs_i
+            q_pos = q_positions[qi]
+            s = jnp.einsum("bqghd,bkhd->bghqk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = _tile_mask(q_pos, kv_pos, causal, window) & valid[None, :]
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lse_i[..., None]), 0.0)
+            dv_j = dv_j + jnp.einsum("bghqk,bqghd->bkhd", p,
+                                     do_blk.astype(jnp.float32))
+            dp = jnp.einsum("bqghd,bkhd->bghqk", do_blk.astype(jnp.float32),
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - delta_i[..., None]) * scale
+            dq_i = jnp.einsum("bghqk,bkhd->bqghd", ds, k_blk.astype(jnp.float32))
+            dk_j = dk_j + jnp.einsum("bghqk,bqghd->bkhd", ds,
+                                     q_blk.astype(jnp.float32))
+            return (dk_j, dv_j), dq_i
+
+        dk0 = jnp.zeros((B, bk_, Hkv, dh), jnp.float32)
+        dv0 = jnp.zeros((B, bk_, Hkv, dh), jnp.float32)
+        (dk_j, dv_j), dq_steps = jax.lax.scan(
+            q_step, (dk0, dv0), (jnp.arange(nq), qb, dob, lse, deltas))
+        return dq_acc + dq_steps, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, B, bq_, g, Hkv, dh), jnp.float32)
+    dq_acc, (dk_all, dv_all) = jax.lax.scan(
+        kv_block, dq0, (jnp.arange(nk), kb, vb))
+
+    dq = dq_acc.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq_, Hq, dh)
+    dk = dk_all.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk_, Hkv, dh)
+    dv = dv_all.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk_, Hkv, dh)
+    return (dq[:, :Tq].astype(q.dtype), dk[:, :Tk].astype(k.dtype),
+            dv[:, :Tk].astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash_attention(q, k, v, window, causal, block_q, block_kv, q_offset):
+    out, _ = _flash_fwd_impl(q, k, v, window, causal, block_q, block_kv, q_offset)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, window, causal, block_q, block_kv, q_offset):
+    out, lse = _flash_fwd_impl(q, k, v, window, causal, block_q, block_kv,
+                               q_offset)
+    return out, (q, k, v, window, lse)
+
+
+def _flash_vjp_bwd(causal, block_q, block_kv, q_offset, res, dout):
+    import numpy as np
+
+    q, k, v, window, lse = res
+    dq, dk, dv = _flash_bwd_impl(q, k, v, window, lse, dout, causal, block_q,
+                                 block_kv, q_offset)
+    dwindow = np.zeros(jnp.shape(window), jax.dtypes.float0)
+    return dq, dk, dv, dwindow
+
+
+_flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window=0,
+                        block_q: int = 512, block_kv: int = 512, q_offset=0):
+    """Flash attention with a CUSTOM VJP. q: (B,Tq,Hq,dh); k/v: (B,Tk,Hkv,dh).
+
+    Forward streams (block_q x block_kv) tiles with a running max/denom;
+    backward RECOMPUTES the probability tiles from the saved log-sum-exp
+    instead of storing them, so per-layer attention memory is O(T x block)
+    in both passes (the naive scan backward stored the full (T, T) prob
+    stack - 34 GiB/layer/device at 32k; EXPERIMENTS.md SSPerf, P2).
+    ``window`` > 0 = sliding-window (int or traced per-layer scalar).
+    """
+    window = jnp.asarray(window, jnp.int32)
+    return _flash_attention(q, k, v, window, bool(causal), int(block_q),
+                            int(block_kv), int(q_offset))
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single new token vs KV cache) + LSE-combine helper
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_local(q, k_cache, v_cache, cache_len, *, window=0,
+                           pos_offset=0):
+    """One-token attention against a (possibly sharded) KV chunk.
+
+    q: (B, Hq, dh); k/v_cache: (B, S, Hkv, dh); cache_len: () or (B,) TOTAL
+    valid length in ABSOLUTE positions; ``pos_offset`` is the absolute
+    position of this chunk's first slot (sequence-parallel shards pass their
+    offset so sliding windows mask correctly across shards).  Returns
+    (out_unnorm (B, Hq, dh) f32, m (B, Hq), l (B, Hq)) - the flash-decoding
+    partial triple, combinable across shards with ``lse_combine``.
+    """
+    B, S, Hkv, dh = k_cache.shape
+    Hq = q.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    scale = dh**-0.5
+    qg = q.reshape(B, g, Hkv, dh)  # interleaved grouping, no kv expansion
+    # keep the cache in its storage dtype: einsum with f32 ACCUMULATION
+    # (an astype(f32) here materialises a full f32 cache copy - 2x the KV
+    # bytes and the decode dry-run's top allocation; EXPERIMENTS.md SSPerf)
+    s = jnp.einsum("bghd,bshd->bghs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = pos_offset + jnp.arange(S)
+    total = jnp.reshape(cache_len, (-1, 1))
+    valid = pos[None, :] < total
+    w = jnp.asarray(window)
+    valid &= (w <= 0) | (pos[None, :] >= total - w)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bghs,bshd->bghd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, dh), m.reshape(B, Hq), l.reshape(B, Hq)
+
+
+def lse_combine(parts):
+    """Combine flash-decoding partials [(out, m, l), ...] exactly."""
+    outs, ms, ls = zip(*parts)
+    m_g = functools.reduce(jnp.maximum, ms)
+    num = sum(o * jnp.exp(m - m_g)[..., None] for o, m in zip(outs, ms))
+    den = sum(l * jnp.exp(m - m_g) for l, m in zip(ls, ms))
+    return num / jnp.maximum(den[..., None], 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down

@@ -1,0 +1,252 @@
+"""Recsys ranking/retrieval models: AutoInt, DIN, two-tower, DCN-v2.
+
+All four share the sharded embedding substrate (models/embedding.py); they
+differ in the feature-interaction op - exactly how the source papers frame
+it:
+
+  AutoInt  : multi-head self-attention over field embeddings [1810.11921]
+  DIN      : target-attention over user behaviour history    [1706.06978]
+  two-tower: MLP towers + dot, in-batch sampled softmax      [RecSys'19]
+  DCN-v2   : x_{l+1} = x0 * (W x_l + b) + x_l cross layers   [2008.13535]
+
+The two-tower ``retrieval_cand`` serving path (1 query vs 10^6 candidates)
+is the paper's own problem: it is served by repro.core (brute-force
+matmul top-k on the negdot distance, or an SW-graph/NN-descent index over
+the candidate-tower embeddings) - see examples/recsys_ann.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RecsysConfig
+from repro.sharding.api import batch_axes, constrain
+from .embedding import embedding_lookup, field_offsets, init_table, table_spec
+from .layers import dense_init
+
+
+def _mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        "w": [dense_init(ks[i], dims[i], dims[i + 1], dtype) for i in range(len(dims) - 1)],
+        "b": [jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)],
+    }
+
+
+def _mlp_apply(p, x, act=jax.nn.relu, final_act=False):
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def _mlp_specs(dims):
+    return {
+        "w": [P(None, None) for _ in range(len(dims) - 1)],
+        "b": [P(None) for _ in range(len(dims) - 1)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# shared init
+# ---------------------------------------------------------------------------
+
+
+def _pad_vocab(cfg: RecsysConfig, mult: int = 512) -> int:
+    total = cfg.table_rows()
+    return -(-total // mult) * mult
+
+
+def init_params(cfg: RecsysConfig, key) -> Dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.embed_dim
+    params = {"table": init_table(ks[0], (_pad_vocab(cfg),), d)}
+
+    if cfg.interaction == "self-attn":  # AutoInt
+        da, h = cfg.d_attn, cfg.n_attn_heads
+        layers = []
+        for i in range(cfg.n_attn_layers):
+            kk = jax.random.split(ks[1 + i % 3], 4)
+            d_in = d if i == 0 else da
+            layers.append(
+                {
+                    "wq": dense_init(kk[0], d_in, da, jnp.float32),
+                    "wk": dense_init(kk[1], d_in, da, jnp.float32),
+                    "wv": dense_init(kk[2], d_in, da, jnp.float32),
+                    "wres": dense_init(kk[3], d_in, da, jnp.float32),
+                }
+            )
+        params["attn"] = layers
+        params["head"] = _mlp_init(ks[5], (cfg.n_sparse * da + cfg.n_dense, 1))
+    elif cfg.interaction == "target-attn":  # DIN
+        # attention MLP over [h, t, h-t, h*t]
+        att_dims = (4 * d,) + tuple(cfg.attn_mlp_dims) + (1,)
+        params["att_mlp"] = _mlp_init(ks[1], att_dims)
+        in_dim = 2 * d + (cfg.n_sparse - 1) * d + cfg.n_dense
+        params["head"] = _mlp_init(ks[2], (in_dim,) + tuple(cfg.mlp_dims) + (1,))
+    elif cfg.interaction == "cross":  # DCN-v2
+        x0 = cfg.n_dense + cfg.n_sparse * d
+        cross = []
+        for i in range(cfg.n_cross_layers):
+            kk = jax.random.fold_in(ks[1], i)
+            cross.append(
+                {"w": dense_init(kk, x0, x0, jnp.float32), "b": jnp.zeros((x0,), jnp.float32)}
+            )
+        params["cross"] = cross
+        params["head"] = _mlp_init(ks[2], (x0,) + tuple(cfg.mlp_dims) + (1,))
+    elif cfg.interaction == "dot":  # two-tower
+        # field split: first half of fields -> user tower, rest -> item tower
+        fu = cfg.n_sparse // 2
+        dims_u = (fu * d,) + tuple(cfg.tower_mlp_dims)
+        dims_i = ((cfg.n_sparse - fu) * d,) + tuple(cfg.tower_mlp_dims)
+        params["user_tower"] = _mlp_init(ks[1], dims_u)
+        params["item_tower"] = _mlp_init(ks[2], dims_i)
+    else:
+        raise ValueError(cfg.interaction)
+    return params
+
+
+def param_specs(cfg: RecsysConfig, fsdp_axis="data", tp_axis="model"):
+    specs = {"table": table_spec(tp_axis, fsdp_axis)}
+    if cfg.interaction == "self-attn":
+        specs["attn"] = [
+            {k: P(None, None) for k in ("wq", "wk", "wv", "wres")}
+            for _ in range(cfg.n_attn_layers)
+        ]
+        specs["head"] = _mlp_specs((1, 1))
+        specs["head"] = {"w": [P(None, None)], "b": [P(None)]}
+    elif cfg.interaction == "target-attn":
+        specs["att_mlp"] = {
+            "w": [P(None, None)] * (len(cfg.attn_mlp_dims) + 1),
+            "b": [P(None)] * (len(cfg.attn_mlp_dims) + 1),
+        }
+        specs["head"] = {
+            "w": [P(None, None)] * (len(cfg.mlp_dims) + 1),
+            "b": [P(None)] * (len(cfg.mlp_dims) + 1),
+        }
+    elif cfg.interaction == "cross":
+        specs["cross"] = [
+            {"w": P(None, None), "b": P(None)} for _ in range(cfg.n_cross_layers)
+        ]
+        specs["head"] = {
+            "w": [P(None, None)] * (len(cfg.mlp_dims) + 1),
+            "b": [P(None)] * (len(cfg.mlp_dims) + 1),
+        }
+    elif cfg.interaction == "dot":
+        nt = len(cfg.tower_mlp_dims)
+        specs["user_tower"] = {"w": [P(None, None)] * nt, "b": [P(None)] * nt}
+        specs["item_tower"] = {"w": [P(None, None)] * nt, "b": [P(None)] * nt}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_fields(params, cfg: RecsysConfig, sparse_ids):
+    offsets = field_offsets(cfg.vocab_sizes)
+    return embedding_lookup(params["table"], sparse_ids, offsets)  # (B, F, d)
+
+
+def forward(params, batch, cfg: RecsysConfig):
+    """-> logits (B,). Dispatch on interaction type."""
+    emb = _embed_fields(params, cfg, batch["sparse_ids"])
+    B = emb.shape[0]
+    bt = batch_axes() or None
+    emb = constrain(emb, P(bt, None, None))
+
+    if cfg.interaction == "self-attn":
+        x = emb
+        h = cfg.n_attn_heads
+        for lp in params["attn"]:
+            q = (x @ lp["wq"]).reshape(B, -1, h, cfg.d_attn // h)
+            k = (x @ lp["wk"]).reshape(B, -1, h, cfg.d_attn // h)
+            v = (x @ lp["wv"]).reshape(B, -1, h, cfg.d_attn // h)
+            s = jnp.einsum("bfhe,bghe->bhfg", q, k) / (cfg.d_attn // h) ** 0.5
+            a = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhfg,bghe->bfhe", a, v).reshape(B, -1, cfg.d_attn)
+            x = jax.nn.relu(o + x @ lp["wres"])
+        flat = x.reshape(B, -1)
+        if cfg.n_dense:
+            flat = jnp.concatenate([flat, batch["dense"]], axis=1)
+        return _mlp_apply(params["head"], flat)[:, 0]
+
+    if cfg.interaction == "target-attn":
+        # field 0 = target item; history ids share field-0's vocabulary
+        target = emb[:, 0]  # (B, d)
+        offsets = field_offsets(cfg.vocab_sizes)
+        hist = embedding_lookup(
+            params["table"], batch["history"], jnp.broadcast_to(offsets[:1], (batch["history"].shape[1],))
+        )  # (B, T, d)
+        t = jnp.broadcast_to(target[:, None, :], hist.shape)
+        att_in = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+        w = _mlp_apply(params["att_mlp"], att_in)[..., 0]  # (B, T)
+        T = hist.shape[1]
+        mask = jnp.arange(T)[None, :] < batch["hist_len"][:, None]
+        w = jnp.where(mask, w, -1e30)
+        w = jax.nn.softmax(w, axis=-1)
+        user = jnp.einsum("bt,btd->bd", w, hist)
+        rest = emb[:, 1:].reshape(B, -1)
+        feats = [user, target, rest]
+        if cfg.n_dense:
+            feats.append(batch["dense"])
+        return _mlp_apply(params["head"], jnp.concatenate(feats, axis=1))[:, 0]
+
+    if cfg.interaction == "cross":
+        x0 = jnp.concatenate([batch["dense"], emb.reshape(B, -1)], axis=1)
+        x = x0
+        for lp in params["cross"]:
+            x = x0 * (x @ lp["w"] + lp["b"]) + x
+        return _mlp_apply(params["head"], x)[:, 0]
+
+    raise ValueError(f"forward() not defined for {cfg.interaction}; use tower fns")
+
+
+def tower_embeddings(params, batch, cfg: RecsysConfig):
+    """Two-tower: -> (user_emb (B, dE), item_emb (B, dE)), L2-normalized."""
+    emb = _embed_fields(params, cfg, batch["sparse_ids"])
+    B = emb.shape[0]
+    fu = cfg.n_sparse // 2
+    u = _mlp_apply(params["user_tower"], emb[:, :fu].reshape(B, -1))
+    it = _mlp_apply(params["item_tower"], emb[:, fu:].reshape(B, -1))
+    u = u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+    it = it / jnp.maximum(jnp.linalg.norm(it, axis=-1, keepdims=True), 1e-6)
+    return u, it
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def bce_loss(params, batch, cfg: RecsysConfig):
+    logits = forward(params, batch, cfg)
+    y = batch["label"]
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def inbatch_softmax_loss(params, batch, cfg: RecsysConfig, temperature: float = 0.05):
+    """Two-tower sampled softmax with in-batch negatives (+ logQ left to the
+    data pipeline's sampling-probability estimates when available)."""
+    u, it = tower_embeddings(params, batch, cfg)
+    logits = (u @ it.T) / temperature  # (B, B)
+    labels = jnp.arange(u.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def retrieval_scores(user_emb, candidate_embs):
+    """Serve-path scoring: 1-vs-N candidates = the paper's negdot distance."""
+    from repro.core.distances import neg_inner_product
+
+    return neg_inner_product().query_matrix(user_emb, candidate_embs, mode="left")

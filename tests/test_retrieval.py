@@ -1,0 +1,154 @@
+"""Integration tests: brute force, beam search, graph builders, index API."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ANNIndex,
+    build_nndescent,
+    build_swgraph,
+    filter_and_refine,
+    get_distance,
+    knn_scan,
+    make_batched_searcher,
+    recall_at_k,
+    symmetrized,
+)
+from repro.data.synthetic import lda_like_histograms, random_histograms, split_queries
+
+N_DB, N_Q, DIM, K = 600, 24, 16, 10
+
+
+@pytest.fixture(scope="module")
+def data():
+    X = lda_like_histograms(jax.random.PRNGKey(0), N_DB + N_Q, DIM)
+    Q, db = split_queries(X, N_Q, jax.random.PRNGKey(1))
+    return Q, db
+
+
+@pytest.mark.parametrize("name", ["kl", "itakura_saito", "renyi_0.25", "l2"])
+def test_brute_force_exact(name, data):
+    """Chunked scan must equal the naive full distance matrix argsort."""
+    Q, X = data
+    dist = get_distance(name)
+    d, ids = knn_scan(dist, Q, X, K, chunk=128)
+    full = dist.query_matrix(Q, X, mode="left")
+    want_ids = jnp.argsort(full, axis=1)[:, :K]
+    want_d = jnp.take_along_axis(full, want_ids, axis=1)
+    np.testing.assert_allclose(d, want_d, rtol=1e-5, atol=1e-6)
+    assert recall_at_k(np.asarray(ids), np.asarray(want_ids)) == 1.0
+
+
+def test_brute_force_left_vs_right_differ(data):
+    Q, X = data
+    dist = get_distance("itakura_saito")
+    _, ids_l = knn_scan(dist, Q, X, K, mode="left")
+    _, ids_r = knn_scan(dist, Q, X, K, mode="right")
+    assert recall_at_k(np.asarray(ids_l), np.asarray(ids_r)) < 1.0
+
+
+@pytest.mark.parametrize("builder", ["nndescent", "swgraph"])
+def test_graph_search_high_recall(builder, data):
+    """SW-graph / NN-descent + beam search reach >=90% recall@10 (paper SS3)."""
+    Q, X = data
+    dist = get_distance("kl")
+    _, true_ids = knn_scan(dist, Q, X, K)
+    idx = ANNIndex.build(
+        X, dist, builder=builder, NN=10, ef_construction=60, nnd_iters=6,
+        key=jax.random.PRNGKey(2),
+    )
+    d, ids, n_evals, hops = idx.search(Q, k=K, ef_search=80)
+    r = recall_at_k(np.asarray(ids), np.asarray(true_ids))
+    assert r >= 0.9, f"{builder}: recall={r}"
+    # graph search must beat brute force on distance evaluations
+    assert float(jnp.mean(n_evals.astype(jnp.float32))) < N_DB
+    # returned dists are the original distance, ascending
+    assert bool(jnp.all(jnp.diff(d, axis=1) >= -1e-6))
+
+
+def test_index_time_symmetrization_modes(data):
+    """Graph built under avg/min/reverse/l2, searched with the original."""
+    Q, X = data
+    dist = get_distance("itakura_saito")
+    _, true_ids = knn_scan(dist, Q, X, K)
+    # The paper (SS3) finds reverse-indexed Itakura-Saito DEGRADES recall
+    # substantially (Panels 1b/2f: "we do not even reach the recall of 60%"),
+    # so the bar is mode-dependent - reverse only needs to be non-broken.
+    floors = {"none": 0.75, "avg": 0.75, "min": 0.75, "reverse": 0.3, "l2": 0.6}
+    for mode, floor in floors.items():
+        idx = ANNIndex.build(
+            X, dist, index_sym=mode, builder="nndescent", NN=10, nnd_iters=6,
+            key=jax.random.PRNGKey(3),
+        )
+        _, ids, _, _ = idx.search(Q, k=K, ef_search=100)
+        r = recall_at_k(np.asarray(ids), np.asarray(true_ids))
+        assert r >= floor, f"index_sym={mode}: recall={r}"
+
+
+def test_full_symmetrization_scenario(data):
+    """query_sym=min: beam under symmetrized distance + rerank under original."""
+    Q, X = data
+    dist = get_distance("kl")
+    _, true_ids = knn_scan(dist, Q, X, K)
+    idx = ANNIndex.build(
+        X, dist, index_sym="min", query_sym="min", builder="nndescent", NN=10,
+        nnd_iters=6, key=jax.random.PRNGKey(4),
+    )
+    d, ids, n_evals, _ = idx.search(Q, k=K, ef_search=80, k_c=40)
+    r = recall_at_k(np.asarray(ids), np.asarray(true_ids))
+    assert r >= 0.85, f"full-sym recall={r}"
+    want = dist.query_matrix(Q, X, mode="left")
+    got_d = jnp.take_along_axis(want, jnp.where(ids >= 0, ids, 0), axis=1)
+    np.testing.assert_allclose(d, got_d, rtol=1e-4, atol=1e-5)
+
+
+def test_filter_and_refine_recall_increases_with_kc(data):
+    Q, X = data
+    dist = get_distance("itakura_saito")
+    proxy = symmetrized(dist, "min")
+    _, true_ids = knn_scan(dist, Q, X, K)
+    recalls = []
+    for k_c in (K, 4 * K, 16 * K):
+        _, ids = filter_and_refine(dist, proxy, Q, X, K, k_c, chunk=256)
+        recalls.append(recall_at_k(np.asarray(ids), np.asarray(true_ids)))
+    assert recalls[-1] >= recalls[0]
+    assert recalls[-1] >= 0.95
+
+
+def test_swgraph_structure(data):
+    _, X = data
+    dist = get_distance("kl")
+    adj, deg = build_swgraph(dist, X[:200], NN=6, ef_construction=30)
+    assert adj.shape == (200, 12)
+    # node 0 has in-edges only via reverse insertion; all later nodes have >= 1
+    assert int(jnp.min(deg[1:])) >= 1
+    # no self loops
+    self_loop = jnp.any(adj == jnp.arange(200)[:, None])
+    assert not bool(self_loop)
+
+
+def test_nndescent_improves_over_random(data):
+    """NN-descent adjacency must approximate the true kNN graph."""
+    _, X = data
+    X = X[:300]
+    dist = get_distance("kl")
+    _, true_ids = knn_scan(dist, X, X, 9)  # includes self at rank 0
+    true_nn = np.asarray(true_ids[:, 1:])
+    adj, _ = build_nndescent(dist, X, jax.random.PRNGKey(5), K=8, iters=8,
+                             add_reverse=False)
+    r = recall_at_k(np.asarray(adj), true_nn)
+    assert r >= 0.6, f"graph recall={r}"
+
+
+def test_beam_search_finds_entry_neighbors(data):
+    _, X = data
+    dist = get_distance("kl")
+    idx = ANNIndex.build(X, dist, builder="nndescent", NN=10, nnd_iters=6,
+                         key=jax.random.PRNGKey(6))
+    search = make_batched_searcher(dist, idx.neighbors, X, ef=64, k=K)
+    d, ids, n_evals, hops = search(X[:4])  # DB points as queries
+    # each point's own row should be found as its nearest neighbor (d=0)
+    assert bool(jnp.all(ids[:, 0] == jnp.arange(4)))
+    np.testing.assert_allclose(d[:, 0], 0.0, atol=1e-4)

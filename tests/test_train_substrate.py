@@ -1,0 +1,173 @@
+"""Training substrate: optimizers, grad accumulation, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import (
+    adafactor,
+    adafactor_state_specs,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    warmup_cosine,
+)
+from repro.train.train_step import make_train_step
+
+
+def _quadratic_problem():
+    target = jnp.array([1.0, -2.0, 3.0])
+
+    def loss_fn(params, batch):
+        err = params["w"] - target
+        return jnp.sum(err * err), {"err": jnp.sum(jnp.abs(err))}
+
+    params = {"w": jnp.zeros(3)}
+    return loss_fn, params
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(warmup_cosine(0.1, 5, 200)),
+    lambda: adafactor(warmup_cosine(0.5, 5, 200), min_dim_factored=4),
+])
+def test_optimizers_converge(make_opt):
+    loss_fn, params = _quadratic_problem()
+    opt = make_opt()
+    step = jax.jit(make_train_step(loss_fn, opt, grad_clip=10.0))
+    state = opt.init(params)
+    batch = {}
+    for _ in range(150):
+        params, state, metrics = step(params, state, batch)
+    assert float(metrics["loss"]) < 1e-2, float(metrics["loss"])
+
+
+def test_adafactor_factored_states_are_small():
+    opt = adafactor(warmup_cosine(0.1, 5, 100), min_dim_factored=128)
+    params = {"big": jnp.zeros((4, 256, 512)), "small": jnp.zeros((16,))}
+    state = opt.init(params)
+    assert state["v"]["big"].keys() == {"vr", "vc"}
+    assert state["v"]["big"]["vr"].shape == (4, 256)
+    assert state["v"]["big"]["vc"].shape == (4, 512)
+    assert state["v"]["small"].keys() == {"v"}
+
+
+def test_adafactor_state_specs_strip_factored_axes():
+    from jax.sharding import PartitionSpec as P
+
+    params = {"w": jnp.zeros((4, 256, 512))}
+    specs = {"w": P(None, "data", "model")}
+    out = adafactor_state_specs(params, specs)
+    assert out["v"]["w"]["vr"] == P(None, "data")
+    assert out["v"]["w"]["vc"] == P(None, "model")
+
+
+def test_grad_accumulation_matches_full_batch():
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (8, 1))}
+    batch = {
+        "x": jax.random.normal(jax.random.fold_in(key, 1), (16, 8)),
+        "y": jax.random.normal(jax.random.fold_in(key, 2), (16, 1)),
+    }
+    opt = adamw(lambda s: 0.01)
+    s1 = make_train_step(loss_fn, opt, accum_steps=1)
+    s4 = make_train_step(loss_fn, opt, accum_steps=4)
+    p1, _, m1 = jax.jit(s1)(params, opt.init(params), batch)
+    p4, _, m4 = jax.jit(s4)(params, opt.init(params), batch)
+    np.testing.assert_allclose(m1["loss"], m4["loss"], rtol=1e-5)
+    np.testing.assert_allclose(p1["w"], p4["w"], rtol=1e-4, atol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 3.0, "b": jnp.ones(9) * 4.0}  # norm = sqrt(36+144)
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(global_norm(clipped), 1.0, rtol=1e-5)
+    assert float(norm) > 1.0
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (64, 32)),
+                   "layers": [jnp.ones((4,)), jnp.zeros((2, 2))]},
+        "opt": {"step": jnp.int32(7), "mu": {"w": jnp.full((64, 32), 0.5)}},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 100, tree, chunk_mb=1)
+    restored, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 100
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_chunking_roundtrip(tmp_path):
+    tree = {"big": jnp.arange(200_000, dtype=jnp.float32).reshape(1000, 200)}
+    ckpt.save(str(tmp_path), 1, tree, chunk_mb=0)  # force row chunking
+    restored, _ = ckpt.restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(tree["big"]), np.asarray(restored["big"]))
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    tree = _tree()
+    path = ckpt.save(str(tmp_path), 5, tree)
+    # flip bytes in one chunk file
+    victim = next(f for f in os.listdir(path) if f.endswith(".msgpack"))
+    with open(os.path.join(path, victim), "r+b") as f:
+        f.seek(50)
+        f.write(b"\xde\xad\xbe\xef")
+    with pytest.raises(IOError, match="corruption"):
+        ckpt.restore(str(tmp_path), tree)
+
+
+def test_checkpoint_manager_restart_semantics(tmp_path):
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep=2, every=10)
+    tree = _tree()
+    assert mgr.maybe_save(5, tree) is None  # not on schedule
+    for s in (10, 20, 30):
+        assert mgr.maybe_save(s, tree) is not None
+    # keep=2 garbage collection
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_20", "step_30"]
+    restored, last = mgr.resume(tree)
+    assert last == 30
+    # fresh dir resumes at -1 (cold start)
+    mgr2 = ckpt.CheckpointManager(str(tmp_path / "fresh"))
+    _, last2 = mgr2.resume(tree)
+    assert last2 == -1
+
+
+def test_checkpoint_crash_during_save_leaves_previous_intact(tmp_path):
+    """Simulated crash: a .tmp dir must not shadow the last good step."""
+    tree = _tree()
+    ckpt.save(str(tmp_path), 10, tree)
+    # simulate a torn save: create a stale tmp dir for step 20
+    os.makedirs(tmp_path / "step_20.tmp")
+    restored, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 10  # LATEST still points at the complete checkpoint
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 300), cols=st.integers(1, 20), seed=st.integers(0, 99))
+def test_property_checkpoint_any_shape(tmp_path_factory, rows, cols, seed):
+    tmp = tmp_path_factory.mktemp("ck")
+    arr = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    tree = {"x": arr}
+    ckpt.save(str(tmp), 0, tree, chunk_mb=0)
+    restored, _ = ckpt.restore(str(tmp), tree)
+    np.testing.assert_array_equal(np.asarray(arr), np.asarray(restored["x"]))
