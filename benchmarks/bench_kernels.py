@@ -1,9 +1,15 @@
-"""Kernel benchmark: Pallas distance-matrix kernel vs jnp reference.
+"""Kernel + search-engine benchmarks.
 
-On this CPU container the Pallas kernel runs in interpret mode (Python
-loop per tile), so wall-clock comparisons are not meaningful - we validate
-CORRECTNESS across the paper's shapes and report the jnp path's achieved
-GFLOP/s plus the kernel's analytic VMEM/MXU tiling for the TPU target.
+Kernels: on this CPU container the Pallas kernels run in interpret mode
+(Python loop per tile), so wall-clock comparisons are not meaningful - we
+validate CORRECTNESS across the paper's shapes and report the jnp path's
+achieved GFLOP/s plus the kernel's analytic VMEM/MXU tiling for the TPU
+target.
+
+Beam engine: ``run_beam_engine`` measures the step-synchronized batched
+engine against the vmap-of-while_loop reference searcher on the KL workload
+(recall@10 vs queries/sec frontiers, matched-recall speedup) and records
+the numbers in BENCH_beam_engine.json at the repo root.
 """
 
 from __future__ import annotations
@@ -13,10 +19,10 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distances import get_distance
+from repro.core.metrics import recall_at_k
 from repro.data.synthetic import random_histograms
 from repro.kernels import ref as kref
 from repro.kernels.distance_matrix import distance_matrix
@@ -82,5 +88,104 @@ def run(out_dir: str = "artifacts/bench", quick: bool = False):
     return results
 
 
+# ---------------------------------------------------------------------------
+# batched beam engine vs vmap-of-while_loop reference
+# ---------------------------------------------------------------------------
+
+REFERENCE_EFS = [32, 48, 64, 96, 128]
+BATCHED_CONFIGS = [  # (frontier, ef, compact)
+    (1, 96, 32),
+    (2, 96, 32),
+    (2, 160, 48),
+    (4, 96, 32),
+    (8, 96, 32),
+]
+
+
+def _measure(search, Q, true_ids, reps: int = 5):
+    d, ids, n_evals, hops = search(Q)
+    jax.block_until_ready(d)
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        d, ids, n_evals, hops = search(Q)
+        jax.block_until_ready(d)
+        ts.append(time.time() - t0)
+    return {
+        "qps": round(Q.shape[0] / float(np.median(ts)), 1),
+        "recall@10": round(
+            float(recall_at_k(np.asarray(ids), np.asarray(true_ids))), 4
+        ),
+        "mean_evals": round(float(np.mean(np.asarray(n_evals))), 1),
+        "mean_hops": round(float(np.mean(np.asarray(hops))), 1),
+    }
+
+
+def run_beam_engine(out_path: str = "BENCH_beam_engine.json", quick: bool = False):
+    """Recall@10-vs-qps frontiers of both engines on the KL workload."""
+    from repro.core import ANNIndex, knn_scan
+    from repro.core.batched_beam import make_step_searcher
+    from repro.data.synthetic import lda_like_histograms, split_queries
+
+    n_db, n_q, dim, k = (2048, 128, 32, 10) if quick else (8192, 256, 32, 10)
+    key = jax.random.PRNGKey(0)
+    data = lda_like_histograms(key, n_db + n_q, dim)
+    Q, X = split_queries(data, n_q, jax.random.fold_in(key, 1))
+    dist = get_distance("kl")
+    idx = ANNIndex.build(X, dist, builder="nndescent", NN=15,
+                         key=jax.random.fold_in(key, 2))
+    _, true_ids = knn_scan(dist, Q, X, k)
+
+    reference, batched = [], []
+    for ef in REFERENCE_EFS[: 3 if quick else None]:
+        r = _measure(idx.searcher(k, ef, engine="reference"), Q, true_ids)
+        r["ef"] = ef
+        reference.append(r)
+        print(f"[engine] reference ef={ef:3d}: {r['qps']:8.1f} q/s "
+              f"recall={r['recall@10']:.4f}")
+    for frontier, ef, compact in BATCHED_CONFIGS[: 3 if quick else None]:
+        search = make_step_searcher(dist, idx.neighbors, X, ef, k,
+                                    entries=idx.entries, frontier=frontier,
+                                    compact=compact)
+        r = _measure(search, Q, true_ids)
+        r.update(frontier=frontier, ef=ef, compact=compact)
+        batched.append(r)
+        print(f"[engine] batched T={frontier} ef={ef:3d}: {r['qps']:8.1f} q/s "
+              f"recall={r['recall@10']:.4f}")
+
+    # matched-recall speedup: for each batched point, the fastest reference
+    # point with recall >= (batched recall - eps) is the fair baseline
+    eps = 1e-3
+    comparisons = []
+    for b in batched:
+        feasible = [r for r in reference if r["recall@10"] >= b["recall@10"] - eps]
+        if not feasible:
+            continue
+        base = max(feasible, key=lambda r: r["qps"])
+        comparisons.append({
+            "batched": {k2: b[k2] for k2 in ("frontier", "ef", "qps", "recall@10")},
+            "reference": {k2: base[k2] for k2 in ("ef", "qps", "recall@10")},
+            "speedup": round(b["qps"] / base["qps"], 2),
+        })
+    best = max(comparisons, key=lambda c: c["speedup"]) if comparisons else None
+    result = {
+        "workload": {"distance": "kl", "n_db": n_db, "n_queries": n_q,
+                     "dim": dim, "k": k, "backend": jax.default_backend()},
+        "reference_frontier": reference,
+        "batched_frontier": batched,
+        "matched_recall_comparisons": comparisons,
+        "best_matched_recall_speedup": best,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    if best:
+        print(f"[engine] best matched-recall speedup: {best['speedup']}x "
+              f"(batched T={best['batched']['frontier']} ef={best['batched']['ef']}"
+              f" vs reference ef={best['reference']['ef']} at recall>="
+              f"{best['batched']['recall@10']:.3f})")
+    return result
+
+
 if __name__ == "__main__":
     run()
+    run_beam_engine()

@@ -17,7 +17,7 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="reduced combos/sizes (CI mode)")
     ap.add_argument("--only", default=None,
-                    choices=[None, "table3", "fig12", "kernels"])
+                    choices=[None, "table3", "fig12", "kernels", "engine"])
     ap.add_argument("--n-db", type=int, default=None)
     ap.add_argument("--n-q", type=int, default=None)
     args = ap.parse_args()
@@ -31,6 +31,12 @@ def main():
         from . import bench_kernels
 
         bench_kernels.run(quick=args.quick)
+
+    if args.only in (None, "engine"):
+        print("\n=== beam engine: batched lock-step vs vmap reference ===")
+        from . import bench_kernels
+
+        bench_kernels.run_beam_engine(quick=args.quick)
 
     if args.only in (None, "table3"):
         print("\n=== Table 3: filter-and-refine symmetrization vs "

@@ -11,7 +11,6 @@ a large candidate corpus - brute-force matmul top-k vs SW-graph index.
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config

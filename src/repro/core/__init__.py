@@ -20,6 +20,12 @@ from .symmetrize import (
 )
 from .brute_force import ground_truth, knn_scan
 from .beam_search import beam_search_impl, make_batched_searcher
+from .batched_beam import (
+    BatchBeamState,
+    batched_beam_search,
+    make_step_searcher,
+    select_entries,
+)
 from .swgraph import build_swgraph
 from .nndescent import build_nndescent
 from .filter_refine import filter_and_refine, kc_sweep, rerank

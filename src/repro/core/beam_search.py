@@ -16,7 +16,6 @@ symmetrization variants all run through the same traversal code.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

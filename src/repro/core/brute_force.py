@@ -9,7 +9,6 @@ into a running top-k.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

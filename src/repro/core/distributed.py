@@ -15,13 +15,11 @@ benchmarks/fig12_swgraph.py via shard-dropout simulation here.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from .beam_search import beam_search_impl
 

@@ -23,6 +23,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .batched_beam import make_step_searcher, select_entries
 from .beam_search import make_batched_searcher
 from .filter_refine import rerank
 from .nndescent import build_nndescent
@@ -39,8 +40,13 @@ class ANNIndex:
     dist: object  # original distance (PairDistance)
     search_dist: object  # distance guiding the beam (may equal dist)
     query_sym: str
-    entry: int = 0
+    entries: Optional[jax.Array] = None  # (E,) i32 beam entry points
     build_info: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def entry(self) -> int:
+        """Primary entry node (the medoid when entries were selected)."""
+        return 0 if self.entries is None else int(self.entries[0])
 
     # ------------------------------------------------------------------ build
 
@@ -57,6 +63,7 @@ class ANNIndex:
         ef_construction: int = 100,
         M_max: Optional[int] = None,
         nnd_iters: int = 8,
+        n_entries: int = 4,
         key=None,
         natural: Optional[Callable] = None,
     ) -> "ANNIndex":
@@ -75,6 +82,11 @@ class ANNIndex:
         else:
             raise ValueError(f"unknown builder {builder!r}")
 
+        entries = select_entries(
+            search_dist, X, n_entries=n_entries,
+            key=jax.random.fold_in(key, 0xE) if key is not None else None,
+        )
+
         info = dict(
             builder=builder,
             index_sym=index_sym,
@@ -89,13 +101,29 @@ class ANNIndex:
             dist=dist,
             search_dist=search_dist,
             query_sym=query_sym,
+            entries=entries,
             build_info=info,
         )
 
     # ----------------------------------------------------------------- search
 
-    def searcher(self, k: int, ef_search: int, k_c: Optional[int] = None):
+    def _make_searcher(self, dist, ef: int, k: int, engine: str, frontier: int):
+        if engine == "batched":
+            return make_step_searcher(dist, self.neighbors, self.X, ef, k,
+                                      entries=self.entries, frontier=frontier)
+        if engine == "reference":
+            return make_batched_searcher(dist, self.neighbors, self.X, ef, k,
+                                         entry=self.entry)
+        raise ValueError(f"unknown engine {engine!r}; known: batched, reference")
+
+    def searcher(self, k: int, ef_search: int, k_c: Optional[int] = None,
+                 engine: str = "batched", frontier: int = 2):
         """Return a jitted ``search(Q) -> (dists, ids, n_evals, hops)``.
+
+        ``engine="batched"`` (default) runs the step-synchronized batched
+        beam engine with multi-entry seeding and ``frontier`` candidates
+        expanded per lock-step; ``engine="reference"`` keeps the vmapped
+        per-query while_loop that parity tests compare against.
 
         Full-symmetrization scenario (query_sym != none): the beam runs under
         the symmetrized distance with ef >= k_c, producing k_c candidates
@@ -103,13 +131,11 @@ class ANNIndex:
         """
         if self.query_sym == "none":
             ef = max(ef_search, k)
-            return make_batched_searcher(self.dist, self.neighbors, self.X, ef, k,
-                                         entry=self.entry)
+            return self._make_searcher(self.dist, ef, k, engine, frontier)
 
         k_c = k_c or max(ef_search, k)
         ef = max(ef_search, k_c)
-        inner = make_batched_searcher(self.search_dist, self.neighbors, self.X, ef, k_c,
-                                      entry=self.entry)
+        inner = self._make_searcher(self.search_dist, ef, k_c, engine, frontier)
 
         @jax.jit
         def search(Q):
@@ -119,5 +145,6 @@ class ANNIndex:
 
         return search
 
-    def search(self, Q, k: int = 10, ef_search: int = 64, k_c: Optional[int] = None):
-        return self.searcher(k, ef_search, k_c)(Q)
+    def search(self, Q, k: int = 10, ef_search: int = 64, k_c: Optional[int] = None,
+               engine: str = "batched", frontier: int = 2):
+        return self.searcher(k, ef_search, k_c, engine=engine, frontier=frontier)(Q)

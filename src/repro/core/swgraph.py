@@ -63,8 +63,7 @@ def build_swgraph(dist, X, NN: int = 15, ef_construction: int = 100, M_max: int 
         adj_d = adj_d.at[i].set(row_d)
 
         # reverse edges: insert i into each neighbor j's list (evict farthest)
-        rows_i = jax.tree.map(lambda a: a[i[None] if hasattr(i, "shape") else jnp.array([i])],
-                              consts)
+        rows_i = jax.tree.map(lambda a: a[jnp.asarray(i)[None]], consts)
 
         def add_reverse(t, carry):
             adj, adj_d = carry

@@ -31,7 +31,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .distances import Distance, get_distance, l2_squared
+from .distances import Distance, l2_squared
 
 SYM_MODES = ("none", "avg", "min", "reverse", "l2", "natural")
 

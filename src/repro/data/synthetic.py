@@ -19,7 +19,6 @@ the assigned-architecture substrates.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

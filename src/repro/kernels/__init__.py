@@ -2,8 +2,10 @@
 
 distance_matrix: MXU-tiled brute-force/construction block (compute-bound)
 gather_topk:     scalar-prefetch fused neighbor gather+score (DMA-bound)
+frontier_gather: per-query DMA row gather + one MXU matvec for the batched
+                 beam engine's (B, frontier*M) lock-step expansion
 ops:             jitted wrappers (interpret off-TPU, compiled on TPU)
 ref:             pure-jnp oracles every kernel is tested against
 """
 
-from .ops import beam_gather_scores, query_distance_matrix
+from .ops import beam_gather_scores, frontier_gather_scores, query_distance_matrix

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused frontier gather + distance for the batched engine.
+
+One grid step = one query.  The query's (R,) candidate ids are scalar-
+prefetched to SMEM and drive R row DMAs from the HBM-resident database into
+a (R, m'+1) VMEM scratch (the per-row bias rides along as an appended
+column, so rep + bias arrive in a single copy).  Once the gather lands, the
+whole frontier is scored with ONE (R, m') x (m',) MXU matvec plus the shared
+post-combine epilogue — versus ``gather_topk.gather_scores`` which issues a
+scalar VPU dot per (query, candidate) grid cell.
+
+This is the kernel behind ``repro.core.batched_beam``: R = frontier * M ids
+per query per step, so the matvec is MXU-shaped for realistic beam settings
+(R >= 64 once frontier >= 2 with the paper's M = 30 graphs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .distance_matrix import _epilogue
+
+
+def _kernel(ids_ref, q_ref, qb_ref, x_hbm, o_ref, rows_vmem, sems, *, post_id: int,
+            c0: float, R: int, m: int):
+    b = pl.program_id(0)
+
+    def start(r, _):
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(ids_ref[b, r], 1), :],
+            rows_vmem.at[pl.ds(r, 1), :],
+            sems.at[r],
+        ).start()
+        return 0
+
+    jax.lax.fori_loop(0, R, start, 0)
+
+    def wait(r, _):
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(ids_ref[b, r], 1), :],
+            rows_vmem.at[pl.ds(r, 1), :],
+            sems.at[r],
+        ).wait()
+        return 0
+
+    jax.lax.fori_loop(0, R, wait, 0)
+
+    rows = rows_vmem[...]
+    s = jnp.dot(
+        rows[:, :m].astype(jnp.float32),
+        q_ref[0, :].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    # epilogue broadcast: s (R,), x bias (R,), q bias scalar
+    o_ref[0, :] = _epilogue(post_id, s, rows[:, m], qb_ref[0, 0], c0)
+
+
+@functools.partial(jax.jit, static_argnames=("post_id", "c0", "interpret"))
+def frontier_scores(
+    ids,  # (B, R) int32 candidate row indices (-1 padding)
+    q_rep,  # (B, m') prepped query reps
+    q_bias,  # (B,)
+    x_rep,  # (n, m') prepped DB reps
+    x_bias,  # (n,)
+    post_id: int,
+    c0: float = 0.0,
+    interpret: bool = True,
+):
+    """(B, R) f32 left-query distances of the gathered rows (inf where id < 0)."""
+    B, R = ids.shape
+    n, m = x_rep.shape
+    safe_ids = jnp.where(ids >= 0, ids, 0)
+    x_aug = jnp.concatenate(
+        [x_rep.astype(jnp.float32), x_bias[:, None].astype(jnp.float32)], axis=1
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda b, ids_ref: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, ids_ref: (b, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # database stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, R), lambda b, ids_ref: (b, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R, m + 1), jnp.float32),
+            pltpu.SemaphoreType.DMA((R,)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, post_id=post_id, c0=c0, R=R, m=m),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, q_rep, q_bias[:, None].astype(jnp.float32), x_aug)
+    return jnp.where(ids >= 0, out, jnp.inf)

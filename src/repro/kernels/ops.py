@@ -12,11 +12,11 @@ kernel and the jnp path are interchangeable per call site.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.distances import Distance
 from . import ref as _ref
 from .distance_matrix import distance_matrix as _dm_kernel
+from .frontier_gather import frontier_scores as _fs_kernel
 from .gather_topk import gather_scores as _gs_kernel
 
 
@@ -50,3 +50,20 @@ def beam_gather_scores(dist: Distance, ids, Q, X, use_pallas=None):
         ids, q_rep, x_rep, q_bias, x_bias, dist.post_id, dist.c0,
         interpret=not _on_tpu(),
     )
+
+
+def frontier_gather_scores(dist: Distance, ids, q_rep, q_bias, x_rep, x_bias,
+                           use_pallas=None):
+    """(B, R) distances of frontier rows from ALREADY-PREPPED reps.
+
+    The batched beam engine calls this once per lock-step with the full
+    (B, frontier*M) candidate block; reps are prepped once outside the loop.
+    ``use_pallas=None`` uses the fused DMA kernel only on TPU (the interpret
+    path is a per-tile Python loop — correct but slow off-TPU).
+    """
+    if use_pallas is True or (use_pallas is None and _on_tpu()):
+        return _fs_kernel(
+            ids, q_rep, q_bias, x_rep, x_bias, dist.post_id, dist.c0,
+            interpret=not _on_tpu(),
+        )
+    return _ref.gather_scores_ref(ids, q_rep, x_rep, q_bias, x_bias, dist.post_id, dist.c0)

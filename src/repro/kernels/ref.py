@@ -7,7 +7,6 @@ outside the kernel); the kernel hot loop is the tiled matmul + post-combine.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.distances import apply_post

@@ -24,9 +24,7 @@ consecutive hosts never loses index data.
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 
 @dataclasses.dataclass

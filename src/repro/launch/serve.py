@@ -13,7 +13,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ANNIndex, get_distance, knn_scan, recall_at_k
@@ -24,7 +23,8 @@ from repro.data.synthetic import lda_like_histograms, split_queries
 def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
                     n_queries: int = 256, batch: int = 64, k: int = 10,
                     ef_search: int = 96, index_sym: str = "none",
-                    builder: str = "nndescent", verbose: bool = True):
+                    builder: str = "nndescent", engine: str = "batched",
+                    frontier: int = 4, n_entries: int = 4, verbose: bool = True):
     key = jax.random.PRNGKey(0)
     data = lda_like_histograms(key, n_db + n_queries, dim)
     Q, X = split_queries(data, n_queries, jax.random.fold_in(key, 1))
@@ -32,10 +32,17 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
 
     t0 = time.time()
     idx = ANNIndex.build(X, dist, index_sym=index_sym, builder=builder,
-                         NN=15, ef_construction=100,
+                         NN=15, ef_construction=100, n_entries=n_entries,
                          key=jax.random.fold_in(key, 2))
     build_s = time.time() - t0
-    search = idx.searcher(k, ef_search)
+    search = idx.searcher(k, ef_search, engine=engine, frontier=frontier)
+    # warm the jit cache on every batch shape served (full batches plus a
+    # possible ragged tail) so latency percentiles reflect steady state,
+    # not compilation
+    jax.block_until_ready(search(Q[:batch])[0])
+    tail = n_queries % batch
+    if tail:
+        jax.block_until_ready(search(Q[:tail])[0])
 
     # ground truth for quality accounting
     _, true_ids = knn_scan(dist, Q, X, k)
@@ -55,6 +62,7 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
     recall = recall_at_k(np.concatenate(all_ids), np.asarray(true_ids))
     stats = {
         "build_s": round(build_s, 2),
+        "engine": engine,
         "served": served,
         "recall@k": round(recall, 4),
         "eval_reduction": round(speedup_model(n_db, np.concatenate(evals)), 1),
@@ -76,10 +84,17 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--ef", type=int, default=96)
     ap.add_argument("--index-sym", default="none")
+    ap.add_argument("--engine", default="batched", choices=["batched", "reference"])
+    ap.add_argument("--frontier", type=int, default=4,
+                    help="beam candidates expanded per lock-step (batched engine)")
+    ap.add_argument("--entries", type=int, default=4,
+                    help="entry points seeded per query (medoid + random)")
     args = ap.parse_args()
     build_and_serve(distance=args.distance, n_db=args.n_db, dim=args.dim,
                     n_queries=args.queries, batch=args.batch,
-                    ef_search=args.ef, index_sym=args.index_sym)
+                    ef_search=args.ef, index_sym=args.index_sym,
+                    engine=args.engine, frontier=args.frontier,
+                    n_entries=args.entries)
 
 
 if __name__ == "__main__":

@@ -10,7 +10,6 @@ Fault tolerance wiring (DESIGN.md SS7): CheckpointManager.resume() restores
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from typing import Optional
 
@@ -21,7 +20,7 @@ from repro.configs import get_config, get_family, get_smoke_config
 from repro.data.pipeline import DataPipeline
 from repro.data.synthetic import recsys_batch
 from repro.train import checkpoint as ckpt_lib
-from repro.train.optimizer import adafactor, adamw, warmup_cosine
+from repro.train.optimizer import adamw, warmup_cosine
 from repro.train.train_step import lm_loss, make_train_step, recsys_loss
 
 

@@ -17,7 +17,6 @@ with per-field row offsets - one kernel/gather for all fields, one psum.
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -26,7 +25,6 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.api import current_mesh
-from .layers import dense_init
 
 
 import numpy as np

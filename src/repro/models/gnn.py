@@ -16,8 +16,7 @@ layered sampling with fixed fanouts, fully in JAX.
 
 from __future__ import annotations
 
-import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

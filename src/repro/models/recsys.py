@@ -17,7 +17,6 @@ the candidate-tower embeddings) - see examples/recsys_ann.py.
 
 from __future__ import annotations
 
-import functools
 from typing import Dict
 
 import jax

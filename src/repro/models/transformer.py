@@ -20,9 +20,7 @@ selects per tile - no per-layer HLO specialisation needed.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,9 +12,7 @@ Adafactor.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

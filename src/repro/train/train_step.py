@@ -11,8 +11,7 @@ reduction over the sharded vocab axis becomes one all-reduce under GSPMD
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

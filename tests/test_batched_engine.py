@@ -1,0 +1,204 @@
+"""Step-synchronized batched beam engine: parity, recall, and kernel tests.
+
+Parity contract: with frontier=1 and a single entry the engine must be
+bit-for-bit identical to the reference ``beam_search_impl`` under vmap —
+same beams, same distances, same eval counts, same hop counts — across
+distances and symmetrization regimes.  With frontier>1 it trades exactness
+of the expansion ORDER for throughput but must stay at brute-force-level
+recall with far fewer distance evaluations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ANNIndex,
+    get_distance,
+    knn_scan,
+    make_batched_searcher,
+    make_step_searcher,
+    recall_at_k,
+    select_entries,
+    symmetrized,
+)
+from repro.core.batched_beam import _bitonic_merge
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+N_DB, N_Q, DIM, K = 600, 16, 16, 10
+
+
+@pytest.fixture(scope="module")
+def data():
+    X = lda_like_histograms(jax.random.PRNGKey(0), N_DB + N_Q, DIM)
+    Q, db = split_queries(X, N_Q, jax.random.PRNGKey(1))
+    return Q, db
+
+
+def _index(db, dist, index_sym="none"):
+    return ANNIndex.build(
+        db, dist, index_sym=index_sym, builder="nndescent", NN=10, nnd_iters=6,
+        key=jax.random.PRNGKey(2),
+    )
+
+
+@pytest.mark.parametrize("index_sym", ["none", "min"])
+@pytest.mark.parametrize("name", ["kl", "renyi_0.25", "l2"])
+def test_exact_parity_with_reference(name, index_sym, data):
+    """frontier=1, single entry => bit-for-bit identical to beam_search_impl."""
+    Q, db = data
+    dist = get_distance(name)
+    idx = _index(db, dist, index_sym)
+    ref = make_batched_searcher(dist, idx.neighbors, db, ef=48, k=K, entry=0)
+    eng = make_step_searcher(dist, idx.neighbors, db, ef=48, k=K,
+                             entries=jnp.zeros((1,), jnp.int32), frontier=1)
+    d1, i1, e1, h1 = ref(Q)
+    d2, i2, e2, h2 = eng(Q)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+def test_exact_parity_composite_search_distance(data):
+    """The generic pytree scoring path (symmetrized distances) is also exact."""
+    Q, db = data
+    dist = symmetrized(get_distance("kl"), "min")
+    idx = _index(db, get_distance("kl"), "min")
+    ref = make_batched_searcher(dist, idx.neighbors, db, ef=48, k=K, entry=0)
+    eng = make_step_searcher(dist, idx.neighbors, db, ef=48, k=K,
+                             entries=jnp.zeros((1,), jnp.int32), frontier=1)
+    d1, i1, e1, h1 = ref(Q)
+    d2, i2, e2, h2 = eng(Q)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+@pytest.mark.parametrize("name", ["kl", "renyi_0.25", "l2"])
+def test_frontier_recall_and_eval_budget(name, data):
+    """frontier>1 + multi-entry: brute-force-level recall, evals << n."""
+    Q, db = data
+    dist = get_distance(name)
+    idx = _index(db, dist)
+    _, true_ids = knn_scan(dist, Q, db, K)
+    for frontier in (2, 4):
+        eng = make_step_searcher(dist, idx.neighbors, db, ef=80, k=K,
+                                 entries=idx.entries, frontier=frontier)
+        d, ids, n_evals, hops = eng(Q)
+        r = recall_at_k(np.asarray(ids), np.asarray(true_ids))
+        assert r >= 0.9, f"{name} frontier={frontier}: recall={r}"
+        # graph search must beat brute force on distance evaluations
+        assert float(jnp.max(n_evals)) < N_DB
+        # returned distances ascending, ids unique per row
+        assert bool(jnp.all(jnp.diff(d, axis=1) >= -1e-6))
+        for row in np.asarray(ids):
+            row = row[row >= 0]
+            assert len(set(row.tolist())) == len(row), "duplicate ids in top-k"
+
+
+def test_frontier_cuts_hops_at_same_recall(data):
+    Q, db = data
+    dist = get_distance("kl")
+    idx = _index(db, dist)
+    _, true_ids = knn_scan(dist, Q, db, K)
+    eng1 = make_step_searcher(dist, idx.neighbors, db, ef=80, k=K,
+                              entries=idx.entries, frontier=1)
+    eng4 = make_step_searcher(dist, idx.neighbors, db, ef=80, k=K,
+                              entries=idx.entries, frontier=4)
+    _, i1, _, h1 = eng1(Q)
+    _, i4, _, h4 = eng4(Q)
+    r1 = recall_at_k(np.asarray(i1), np.asarray(true_ids))
+    r4 = recall_at_k(np.asarray(i4), np.asarray(true_ids))
+    assert r4 >= r1 - 0.05
+    assert float(jnp.mean(h4.astype(jnp.float32))) < 0.5 * float(
+        jnp.mean(h1.astype(jnp.float32))
+    )
+
+
+def test_pallas_frontier_kernel_matches_jnp_path(data):
+    """Engine results agree between the fused Pallas kernel and jnp scoring."""
+    Q, db = data
+    dist = get_distance("kl")
+    idx = _index(db, dist)
+    jnp_eng = make_step_searcher(dist, idx.neighbors, db, ef=32, k=K,
+                                 entries=idx.entries, frontier=2, use_pallas=False)
+    pl_eng = make_step_searcher(dist, idx.neighbors, db, ef=32, k=K,
+                                entries=idx.entries, frontier=2, use_pallas=True)
+    d1, i1, e1, h1 = jnp_eng(Q[:4])
+    d2, i2, e2, h2 = pl_eng(Q[:4])
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_select_entries_medoid_first_unique(data):
+    _, db = data
+    dist = get_distance("kl")
+    entries = np.asarray(select_entries(dist, db, 4, jax.random.PRNGKey(3)))
+    assert len(entries) == 4
+    assert len(set(entries.tolist())) == 4
+    # the first entry minimises the mean left-query distance over the db
+    D = np.asarray(dist.query_matrix(db, db, mode="left"))
+    centrality = D.mean(axis=0)
+    assert centrality[entries[0]] <= np.quantile(centrality, 0.01)
+
+
+def test_bitonic_merge_equals_stable_argsort():
+    """The merge network reproduces a stable argsort of [beam | candidates]."""
+    rng = np.random.RandomState(0)
+    B, ef, C = 7, 24, 10
+    beam_d = np.sort(rng.randint(0, 8, (B, ef)).astype(np.float32), axis=1)
+    beam_d[:, -3:] = np.inf  # padding
+    kept_d = np.sort(rng.randint(0, 8, (B, C)).astype(np.float32), axis=1)
+    beam_i = rng.randint(0, 100, (B, ef)).astype(np.int32)
+    kept_i = rng.randint(0, 100, (B, C)).astype(np.int32)
+    beam_e = rng.rand(B, ef) < 0.5
+    kept_e = rng.rand(B, C) < 0.5
+    got_d, got_i, got_e = _bitonic_merge(
+        (jnp.asarray(beam_d), jnp.asarray(beam_i), jnp.asarray(beam_e)),
+        (jnp.asarray(kept_d), jnp.asarray(kept_i), jnp.asarray(kept_e)),
+        ef,
+    )
+    all_d = np.concatenate([beam_d, kept_d], axis=1)
+    all_i = np.concatenate([beam_i, kept_i], axis=1)
+    all_e = np.concatenate([beam_e, kept_e], axis=1)
+    order = np.argsort(all_d, axis=1, kind="stable")[:, :ef]
+    np.testing.assert_array_equal(np.asarray(got_d),
+                                  np.take_along_axis(all_d, order, axis=1))
+    np.testing.assert_array_equal(np.asarray(got_i),
+                                  np.take_along_axis(all_i, order, axis=1))
+    np.testing.assert_array_equal(np.asarray(got_e),
+                                  np.take_along_axis(all_e, order, axis=1))
+
+
+def test_index_engine_routing(data):
+    """ANNIndex.searcher routes both engines; batched is the default."""
+    Q, db = data
+    dist = get_distance("kl")
+    idx = _index(db, dist)
+    _, true_ids = knn_scan(dist, Q, db, K)
+    for engine in ("batched", "reference"):
+        d, ids, n_evals, hops = idx.search(Q, k=K, ef_search=80, engine=engine)
+        r = recall_at_k(np.asarray(ids), np.asarray(true_ids))
+        assert r >= 0.9, f"{engine}: recall={r}"
+    with pytest.raises(ValueError):
+        idx.searcher(K, 32, engine="nope")
+
+
+def test_full_symmetrization_through_batched_engine(data):
+    """query_sym != none: batched beam under the symmetrized distance + rerank."""
+    Q, db = data
+    dist = get_distance("kl")
+    _, true_ids = knn_scan(dist, Q, db, K)
+    idx = ANNIndex.build(
+        db, dist, index_sym="min", query_sym="min", builder="nndescent",
+        NN=10, nnd_iters=6, key=jax.random.PRNGKey(4),
+    )
+    d, ids, n_evals, _ = idx.search(Q, k=K, ef_search=80, k_c=40, engine="batched")
+    r = recall_at_k(np.asarray(ids), np.asarray(true_ids))
+    assert r >= 0.85, f"full-sym batched recall={r}"
+    # reported distances are the ORIGINAL distance after rerank
+    want = dist.query_matrix(Q, db, mode="left")
+    got_d = jnp.take_along_axis(want, jnp.where(ids >= 0, ids, 0), axis=1)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(got_d), rtol=1e-4, atol=1e-5)

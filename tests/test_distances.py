@@ -7,7 +7,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import distances as D
-from repro.core.symmetrize import ReversedDistance, SymmetrizedDistance, symmetrized
+from repro.core.symmetrize import symmetrized
 from repro.data.synthetic import random_histograms, text_collection
 
 ALL_HIST_DISTS = ["kl", "itakura_saito", "renyi_0.25", "renyi_0.75", "renyi_2", "l2"]

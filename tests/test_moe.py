@@ -1,6 +1,5 @@
 """MoE routing correctness: gather-only dispatch/combine vs dense reference."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ from repro.core import (
     recall_at_k,
     symmetrized,
 )
-from repro.data.synthetic import lda_like_histograms, random_histograms, split_queries
+from repro.data.synthetic import lda_like_histograms, split_queries
 
 N_DB, N_Q, DIM, K = 600, 24, 16, 10
 

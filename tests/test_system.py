@@ -7,7 +7,6 @@ symmetrization.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ANNIndex, get_distance, knn_scan, recall_at_k, speedup_model
