@@ -1,0 +1,134 @@
+"""Index-construction benchmark: wave-parallel engine vs sequential insertion.
+
+``run_build_engine`` measures build throughput (points/sec, steady-state
+post-compile) and downstream search quality (recall@10 with a FIXED batched
+searcher against brute-force ground truth) for
+
+  * the sequential reference builder (``build_swgraph``),
+  * the wave engine at several wave sizes (``build_swgraph_wave``),
+  * NN-descent (fused-kernel candidate scoring) for context,
+
+on the KL workload, and records everything in BENCH_build_engine.json at the
+repo root (the CI bench-regression gate compares against it).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import knn_scan, recall_at_k
+from repro.core.batched_beam import make_step_searcher, select_entries
+from repro.core.build_engine import build_swgraph_wave
+from repro.core.distances import get_distance
+from repro.core.nndescent import build_nndescent
+from repro.core.swgraph import build_swgraph
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+WAVES = [(1, 1), (8, 4), (32, 4), (64, 8), (128, 8)]  # (wave, frontier)
+NN, EF_C, EF_SEARCH, K = 15, 100, 96, 10
+
+
+def _timed_build(build_fn, reps: int = 2):
+    """Steady-state (post-compile) wall time of one full build (min of reps)."""
+    out = build_fn()
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        out = build_fn()
+        jax.block_until_ready(out)
+        ts.append(time.time() - t0)
+    return out, min(ts)
+
+
+def _quality(dist, neighbors, X, Q, true_ids, entries):
+    search = make_step_searcher(dist, neighbors, X, EF_SEARCH, K,
+                                entries=entries, frontier=2)
+    _, ids, _, _ = search(Q)
+    return round(float(recall_at_k(np.asarray(ids), np.asarray(true_ids))), 4)
+
+
+def run_build_engine(out_path: str = "BENCH_build_engine.json", quick: bool = False):
+    # quick keeps n large enough that each timed build is >~1s: sub-second
+    # builds are too noisy for the CI regression gate's 15% tolerance
+    n_db, n_q, dim = (2048, 96, 32) if quick else (4096, 128, 32)
+    reps = 3 if quick else 2
+    key = jax.random.PRNGKey(0)
+    data = lda_like_histograms(key, n_db + n_q, dim)
+    Q, X = split_queries(data, n_q, jax.random.fold_in(key, 1))
+    dist = get_distance("kl")
+    _, true_ids = knn_scan(dist, Q, X, K)
+    entries = select_entries(dist, X, 4, jax.random.fold_in(key, 2))
+
+    (adj_s, _), t_seq = _timed_build(
+        lambda: build_swgraph(dist, X, NN=NN, ef_construction=EF_C), reps=reps
+    )
+    sequential = {
+        "build_s": round(t_seq, 3),
+        "pts_per_s": round(n_db / t_seq, 1),
+        "recall@10": _quality(dist, adj_s, X, Q, true_ids, entries),
+    }
+    print(f"[build] sequential : {t_seq:7.2f}s ({sequential['pts_per_s']:7.1f} pts/s) "
+          f"recall={sequential['recall@10']:.4f}")
+
+    waves = []
+    for wave, frontier in WAVES[: 3 if quick else None]:
+        (adj_w, _), t_w = _timed_build(
+            lambda w=wave, f=frontier: build_swgraph_wave(
+                dist, X, NN=NN, ef_construction=EF_C, wave=w, frontier=f
+            ),
+            reps=reps,
+        )
+        r = {
+            "wave": wave,
+            "frontier": frontier,
+            "build_s": round(t_w, 3),
+            "pts_per_s": round(n_db / t_w, 1),
+            "recall@10": _quality(dist, adj_w, X, Q, true_ids, entries),
+            "speedup_vs_sequential": round(t_seq / t_w, 2),
+        }
+        waves.append(r)
+        print(f"[build] wave W={wave:4d}: {t_w:7.2f}s ({r['pts_per_s']:7.1f} pts/s, "
+              f"{r['speedup_vs_sequential']:5.2f}x) recall={r['recall@10']:.4f}")
+
+    (nnd_out, t_n) = _timed_build(
+        lambda: build_nndescent(dist, X, jax.random.fold_in(key, 3), K=NN), reps=reps
+    )
+    nnd = {
+        "build_s": round(t_n, 3),
+        "pts_per_s": round(n_db / t_n, 1),
+        "recall@10": _quality(dist, nnd_out[0], X, Q, true_ids, entries),
+        "speedup_vs_sequential": round(t_seq / t_n, 2),
+    }
+    print(f"[build] nndescent  : {t_n:7.2f}s ({nnd['pts_per_s']:7.1f} pts/s, "
+          f"{nnd['speedup_vs_sequential']:5.2f}x) recall={nnd['recall@10']:.4f}")
+
+    # best wave point at equal recall (within the paper-noise band)
+    eps = 0.005
+    at_equal = [w for w in waves if w["recall@10"] >= sequential["recall@10"] - eps]
+    best = max(at_equal, key=lambda w: w["speedup_vs_sequential"]) if at_equal else None
+    result = {
+        "workload": {"distance": "kl", "n_db": n_db, "n_queries": n_q, "dim": dim,
+                     "k": K, "NN": NN, "ef_construction": EF_C,
+                     "ef_search": EF_SEARCH, "backend": jax.default_backend()},
+        "sequential": sequential,
+        "wave_frontier": waves,
+        "nndescent": nnd,
+        "best_equal_recall_speedup": best,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    if best:
+        print(f"[build] best equal-recall speedup: {best['speedup_vs_sequential']}x "
+              f"(W={best['wave']} frontier={best['frontier']} at "
+              f"recall {best['recall@10']:.4f} vs sequential "
+              f"{sequential['recall@10']:.4f})")
+    return result
+
+
+if __name__ == "__main__":
+    run_build_engine()

@@ -1,0 +1,181 @@
+"""CI benchmark-regression gate: compare fresh bench JSON against baselines.
+
+    python benchmarks/compare_bench.py \
+        --pair <baseline.json> <fresh.json> [--pair ...] \
+        [--qps-tol 0.15] [--recall-tol 0.005] [--calibrate] \
+        [--summary $GITHUB_STEP_SUMMARY]
+
+Fails (exit 1) when any matched config regresses throughput by more than
+``qps_tol`` (relative) or recall@10 by more than ``recall_tol`` (absolute).
+Only configs present in BOTH files are compared, so ``--quick`` runs check
+against quick baselines entry-for-entry.
+
+``--calibrate`` rescales baseline throughput by the measured speed of the
+frozen REFERENCE path (vmapped reference searcher / sequential builder) on
+the current machine — median(fresh_ref/base_ref), clamped to [1/3, 3] — so
+the gate tracks engine regressions rather than runner-class differences.
+The calibration source is the parity-locked reference implementation, which
+PRs are expected to leave untouched; its own absolute throughput is NOT
+gated when calibration is on (it becomes the yardstick).
+
+The comparison table is written as GitHub-flavored markdown to ``--summary``
+(append mode — point it at $GITHUB_STEP_SUMMARY in CI) and echoed to stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# schema: section -> (identity keys, throughput metric) per bench file kind;
+# single-entry sections use () as identity.  recall@10 is gated everywhere.
+SCHEMAS = {
+    "beam_engine": {
+        "calibration": ("reference_frontier", "qps"),
+        "sections": {
+            "reference_frontier": (("ef",), "qps"),
+            "batched_frontier": (("frontier", "ef", "compact"), "qps"),
+        },
+    },
+    "build_engine": {
+        "calibration": ("sequential", "pts_per_s"),
+        "sections": {
+            "sequential": ((), "pts_per_s"),
+            "wave_frontier": (("wave", "frontier"), "pts_per_s"),
+            "nndescent": ((), "pts_per_s"),
+        },
+    },
+}
+
+RECALL = "recall@10"
+
+
+def detect_schema(doc: dict) -> str:
+    for name, schema in SCHEMAS.items():
+        if all(s in doc for s in schema["sections"]):
+            return name
+    raise SystemExit(f"unrecognized bench schema; expected one of {sorted(SCHEMAS)}")
+
+
+def _entries(doc, section, id_keys):
+    """Normalize a section to {identity tuple: entry dict}."""
+    part = doc.get(section)
+    if part is None:
+        return {}
+    rows = part if isinstance(part, list) else [part]
+    return {tuple(r.get(k) for k in id_keys): r for r in rows}
+
+
+def calibration_factor(base: dict, fresh: dict, schema: dict):
+    """Machine-speed factor from the reference path: median(fresh/base)."""
+    section, metric = schema["calibration"]
+    id_keys = schema["sections"][section][0]
+    b, f = _entries(base, section, id_keys), _entries(fresh, section, id_keys)
+    ratios = sorted(
+        f[k][metric] / b[k][metric]
+        for k in set(b) & set(f)
+        if b[k].get(metric) and f[k].get(metric)
+    )
+    if not ratios:
+        return 1.0
+    mid = ratios[len(ratios) // 2]
+    return min(3.0, max(1.0 / 3.0, mid))
+
+
+def compare(base: dict, fresh: dict, *, qps_tol: float, recall_tol: float,
+            calibrate: bool = False):
+    """Returns (rows, failures).  rows: per-metric comparison records."""
+    schema = SCHEMAS[detect_schema(base)]
+    if detect_schema(fresh) != detect_schema(base):
+        raise SystemExit("baseline and fresh files have different schemas")
+    cal = calibration_factor(base, fresh, schema) if calibrate else 1.0
+    cal_section = schema["calibration"][0] if calibrate else None
+
+    rows, failures = [], []
+    for section, (id_keys, thr) in schema["sections"].items():
+        b, f = _entries(base, section, id_keys), _entries(fresh, section, id_keys)
+        for ident in sorted(set(b) & set(f), key=str):
+            cfg = ", ".join(f"{k}={v}" for k, v in zip(id_keys, ident)) or "-"
+            be, fe = b[ident], f[ident]
+            checks = []
+            if thr in be and thr in fe and section != cal_section:
+                floor = be[thr] * cal * (1.0 - qps_tol)
+                checks.append((thr, be[thr] * cal, fe[thr], floor, fe[thr] >= floor))
+            if RECALL in be and RECALL in fe:
+                floor = be[RECALL] - recall_tol
+                checks.append((RECALL, be[RECALL], fe[RECALL], floor, fe[RECALL] >= floor))
+            for metric, bv, fv, floor, ok in checks:
+                row = {
+                    "section": section, "config": cfg, "metric": metric,
+                    "baseline": round(bv, 4), "fresh": round(fv, 4),
+                    "delta_pct": round(100.0 * (fv - bv) / bv, 1) if bv else 0.0,
+                    "floor": round(floor, 4), "ok": ok,
+                }
+                rows.append(row)
+                if not ok:
+                    failures.append(row)
+    return rows, failures, cal
+
+
+def to_markdown(title: str, rows, cal: float) -> str:
+    lines = [f"### bench regression: {title}"]
+    if cal != 1.0:
+        lines.append(f"(baseline throughput calibrated x{cal:.2f} by the reference path)")
+    lines += ["", "| section | config | metric | baseline | fresh | delta | gate |",
+              "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        status = "ok" if r["ok"] else "**FAIL**"
+        lines.append(
+            f"| {r['section']} | {r['config']} | {r['metric']} | {r['baseline']} "
+            f"| {r['fresh']} | {r['delta_pct']:+.1f}% | {status} |"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", nargs=2, action="append", required=True,
+                    metavar=("BASELINE", "FRESH"),
+                    help="baseline/fresh JSON pair (repeatable)")
+    ap.add_argument("--qps-tol", type=float, default=0.15,
+                    help="max relative throughput regression (default 15%%)")
+    ap.add_argument("--recall-tol", type=float, default=0.005,
+                    help="max absolute recall@10 drop (default 0.005)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="rescale baseline throughput by the reference path")
+    ap.add_argument("--summary", default=None,
+                    help="append the markdown table to this file "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+
+    all_failures = []
+    for base_path, fresh_path in args.pair:
+        with open(base_path) as fh:
+            base = json.load(fh)
+        with open(fresh_path) as fh:
+            fresh = json.load(fh)
+        rows, failures, cal = compare(
+            base, fresh, qps_tol=args.qps_tol, recall_tol=args.recall_tol,
+            calibrate=args.calibrate,
+        )
+        md = to_markdown(f"{base_path} vs {fresh_path}", rows, cal)
+        print(md)
+        if args.summary:
+            with open(args.summary, "a") as fh:
+                fh.write(md + "\n")
+        all_failures += failures
+
+    if all_failures:
+        print(f"REGRESSION: {len(all_failures)} gate failure(s)", file=sys.stderr)
+        for r in all_failures:
+            print(f"  {r['section']}[{r['config']}] {r['metric']}: "
+                  f"{r['fresh']} < floor {r['floor']} "
+                  f"(baseline {r['baseline']})", file=sys.stderr)
+        return 1
+    print("bench regression gate: all comparisons within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

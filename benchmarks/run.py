@@ -17,7 +17,7 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="reduced combos/sizes (CI mode)")
     ap.add_argument("--only", default=None,
-                    choices=[None, "table3", "fig12", "kernels", "engine"])
+                    choices=[None, "table3", "fig12", "kernels", "engine", "build"])
     ap.add_argument("--n-db", type=int, default=None)
     ap.add_argument("--n-q", type=int, default=None)
     args = ap.parse_args()
@@ -37,6 +37,12 @@ def main():
         from . import bench_kernels
 
         bench_kernels.run_beam_engine(quick=args.quick)
+
+    if args.only in (None, "build"):
+        print("\n=== build engine: wave-parallel construction vs sequential ===")
+        from . import bench_build
+
+        bench_build.run_build_engine(quick=args.quick)
 
     if args.only in (None, "table3"):
         print("\n=== Table 3: filter-and-refine symmetrization vs "

@@ -27,6 +27,7 @@ from .batched_beam import (
     select_entries,
 )
 from .swgraph import build_swgraph
+from .build_engine import build_sharded, build_swgraph_wave
 from .nndescent import build_nndescent
 from .filter_refine import filter_and_refine, kc_sweep, rerank
 from .index import ANNIndex

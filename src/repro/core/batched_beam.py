@@ -90,12 +90,18 @@ def batched_beam_search(
     max_steps: int | None = None,
     frontier: int = 1,
     compact: int = 32,
+    n_active=None,  # optional () i32: only nodes < n_active are searchable
 ):
     """Run B queries to convergence in lock-step.  Returns BatchBeamState.
 
     ``score_rows`` closes over the query batch and the database constants
     (jnp einsum or the fused Pallas kernel); invalid slots in its output are
     masked here, so it may score placeholder id 0 freely.
+
+    ``n_active`` (may be traced) pre-marks every node >= n_active as visited,
+    mirroring ``beam_search_impl``'s construction-time prefix masking: the
+    wave build engine searches the frozen prefix graph of already-inserted
+    points without ever scoring the not-yet-inserted suffix.
     """
     n, M = neighbors.shape
     E = entries.shape[0]
@@ -120,7 +126,14 @@ def batched_beam_search(
     # one entry at a time (E is small and static) so duplicate entry ids
     # cannot carry into neighboring bits.
     nw = -(-n // 32)
-    seed = jnp.zeros((nw,), jnp.uint32)
+    if n_active is None:
+        seed = jnp.zeros((nw,), jnp.uint32)
+    else:
+        # block the suffix: bit v set iff v >= n_active (bits are distinct,
+        # so a plain sum over the word assembles the OR of the 32 lanes)
+        blocked = jnp.arange(nw * 32, dtype=jnp.int32).reshape(nw, 32) >= n_active
+        lane = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+        seed = jnp.sum(jnp.where(blocked, lane[None, :], jnp.uint32(0)), axis=1, dtype=jnp.uint32)
     for j in range(E):
         w = entries[j] // 32
         seed = seed.at[w].set(seed[w] | (jnp.uint32(1) << (entries[j] % 32).astype(jnp.uint32)))

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from .batched_beam import batched_beam_search
 from .beam_search import beam_search_impl
 
 
@@ -63,13 +64,23 @@ def sharded_knn_scan(mesh, dist, Q, X_sharded, k: int, db_axes=("data",)):
 
 
 def sharded_graph_search(mesh, dist, Q, X_sharded, neighbors_sharded, k: int,
-                         ef: int, db_axes=("data",), drop_shards: int = 0):
+                         ef: int, db_axes=("data",), drop_shards: int = 0,
+                         engine: str = "batched", frontier: int = 1):
     """Distributed graph search: local beam per shard + global merge.
 
     ``neighbors_sharded``: (n, M) int32 with LOCAL row ids per shard
     (each shard's subgraph indexes its own rows 0..n_local-1).
     ``drop_shards``: simulate straggler-dropped shards (first s responses).
+
+    ``engine="batched"`` (default) runs each shard's query batch through the
+    step-synchronized lock-step engine (one while_loop per shard instead of
+    a vmapped per-query loop); at ``frontier=1`` it is step-for-step
+    identical to the ``engine="reference"`` vmapped ``beam_search_impl``
+    path, and ``frontier>1`` trades extra distance evaluations for fewer,
+    MXU-fatter lock-steps exactly like single-host serving.
     """
+    if engine not in ("batched", "reference"):
+        raise ValueError(f"unknown engine {engine!r}; known: batched, reference")
     n_shards = 1
     for a in db_axes:
         n_shards *= int(mesh.shape[a])
@@ -80,13 +91,27 @@ def sharded_graph_search(mesh, dist, Q, X_sharded, neighbors_sharded, k: int,
         shard = jax.lax.axis_index(db_axes)
         consts = dist.prep_scan(X_local)
 
-        def single(q):
-            qc = dist.prep_query(q)
-            st = beam_search_impl(nbrs_local, consts, qc, dist.score,
-                                  jnp.int32(0), ef)
-            return st.beam_d[:k], st.beam_i[:k], st.n_evals
+        if engine == "batched":
+            qc = jax.vmap(dist.prep_query)(Q)
 
-        dloc, iloc, evals = jax.vmap(single)(Q)
+            def score_rows(ids):
+                rows = jax.tree.map(lambda a: a[ids], consts)
+                return jax.vmap(dist.score)(rows, qc)
+
+            st = batched_beam_search(
+                nbrs_local, score_rows, jnp.zeros((1,), jnp.int32),
+                Q.shape[0], ef, frontier=frontier,
+            )
+            dloc, iloc, evals = st.beam_d[:, :k], st.beam_i[:, :k], st.n_evals
+        else:
+
+            def single(q):
+                qc = dist.prep_query(q)
+                st = beam_search_impl(nbrs_local, consts, qc, dist.score,
+                                      jnp.int32(0), ef)
+                return st.beam_d[:k], st.beam_i[:k], st.n_evals
+
+            dloc, iloc, evals = jax.vmap(single)(Q)
         iloc = jnp.where(iloc >= 0, iloc + shard * n_local, -1)
         if drop_shards:
             dead = shard >= (n_shards - drop_shards)
@@ -106,14 +131,28 @@ def sharded_graph_search(mesh, dist, Q, X_sharded, neighbors_sharded, k: int,
 
 
 def build_local_subgraphs(mesh, dist, X_sharded, db_axes=("data",), NN: int = 15,
-                          nnd_iters: int = 8, key=None):
-    """Build per-shard NN-descent subgraphs (local row ids) under shard_map."""
+                          nnd_iters: int = 8, key=None, builder: str = "nndescent",
+                          wave: int = 32):
+    """Build per-shard subgraphs (local row ids) under shard_map.
+
+    ``builder="wave"`` routes through the wave-parallel insertion engine
+    (``repro.core.build_engine``); ``build_sharded`` there additionally
+    stitches the shards into one global-id graph via cross-shard neighbor
+    exchange.
+    """
+    from .build_engine import build_swgraph_wave
     from .nndescent import build_nndescent
 
     key = key if key is not None else jax.random.PRNGKey(0)
 
+    if builder not in ("wave", "nndescent"):
+        raise ValueError(f"unknown builder {builder!r}; known: wave, nndescent")
+
     def local(X_local, key):
-        nbrs, _ = build_nndescent(dist, X_local, key, K=NN, iters=nnd_iters)
+        if builder == "wave":
+            nbrs, _ = build_swgraph_wave(dist, X_local, NN=NN, wave=wave)
+        else:
+            nbrs, _ = build_nndescent(dist, X_local, key, K=NN, iters=nnd_iters)
         return nbrs
 
     return shard_map(

@@ -11,8 +11,13 @@ Scenario knobs (paper SS3, second experimental series):
               produces k_c candidates that are re-ranked under the original
               distance.
 
-Builders: "swgraph" (faithful sequential insertion) or "nndescent"
-(TPU-parallel refinement) - DESIGN.md SS2.3.
+Builders: "swgraph" (incremental insertion) or "nndescent" (TPU-parallel
+refinement) - DESIGN.md SS2.3.  SW-graph insertion itself runs through a
+construction engine knob mirroring the search-side ``engine``/``frontier``
+knobs: ``build_engine="wave"`` (default) inserts points in batches of
+``wave`` through the lock-step batched beam engine (NMSLIB-style relaxed
+ordering, bit-identical to sequential at wave=1), ``build_engine="sequential"``
+keeps the reference one-point-per-step builder.
 """
 
 from __future__ import annotations
@@ -25,6 +30,7 @@ import jax.numpy as jnp
 
 from .batched_beam import make_step_searcher, select_entries
 from .beam_search import make_batched_searcher
+from .build_engine import build_swgraph_wave
 from .filter_refine import rerank
 from .nndescent import build_nndescent
 from .swgraph import build_swgraph
@@ -59,6 +65,9 @@ class ANNIndex:
         index_sym: str = "none",
         query_sym: str = "none",
         builder: str = "nndescent",
+        build_engine: str = "wave",
+        wave: int = 32,
+        build_frontier: Optional[int] = None,
         NN: int = 15,
         ef_construction: int = 100,
         M_max: Optional[int] = None,
@@ -67,13 +76,31 @@ class ANNIndex:
         key=None,
         natural: Optional[Callable] = None,
     ) -> "ANNIndex":
+        """``build_engine``/``wave`` control HOW the swgraph builder inserts:
+
+        "wave" runs construction beam searches in batches of ``wave`` points
+        through the step-synchronized engine against the frozen prefix graph
+        (``build_frontier`` candidates expanded per lock-step, defaulting
+        like the wave builder); "sequential" is the one-point-per-step
+        reference builder the wave path is parity-tested against.
+        """
         build_dist = symmetrized(dist, index_sym, natural=natural)
         search_dist = symmetrized(dist, query_sym, natural=natural) if query_sym != "none" else dist
 
         if builder == "swgraph":
-            neighbors, degrees = build_swgraph(
-                build_dist, X, NN=NN, ef_construction=ef_construction, M_max=M_max
-            )
+            if build_engine == "wave":
+                neighbors, degrees = build_swgraph_wave(
+                    build_dist, X, NN=NN, ef_construction=ef_construction,
+                    M_max=M_max, wave=wave, frontier=build_frontier,
+                )
+            elif build_engine == "sequential":
+                neighbors, degrees = build_swgraph(
+                    build_dist, X, NN=NN, ef_construction=ef_construction, M_max=M_max
+                )
+            else:
+                raise ValueError(
+                    f"unknown build_engine {build_engine!r}; known: wave, sequential"
+                )
         elif builder == "nndescent":
             key = key if key is not None else jax.random.PRNGKey(0)
             neighbors, degrees = build_nndescent(
@@ -89,6 +116,8 @@ class ANNIndex:
 
         info = dict(
             builder=builder,
+            build_engine=build_engine if builder == "swgraph" else "nndescent",
+            wave=wave if (builder, build_engine) == ("swgraph", "wave") else None,
             index_sym=index_sym,
             query_sym=query_sym,
             NN=NN,

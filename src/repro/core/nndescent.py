@@ -7,8 +7,10 @@ SS2.3): every refinement round is a fully batched neighbor-of-neighbor join -
     adj(i) <- top-K by d_build(x_c, x_i) after id-dedup
 
 All rounds are dense gathers + matmul-form distance blocks + top-K merges, so
-construction itself runs at MXU throughput.  Like SW-graph construction, the
-build distance is the INDEX-time distance (symmetrization knob applies).
+construction itself runs at MXU throughput: candidate scoring goes through
+the fused gather+score kernel (``repro.kernels.frontier_gather``) for plain
+matmul-form Distances.  Like SW-graph construction, the build distance is
+the INDEX-time distance (symmetrization knob applies).
 """
 
 from __future__ import annotations
@@ -18,18 +20,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .distances import Distance
+
 INF = jnp.inf
 
 
-def _score_rows(dist, consts, ids, X):
-    """d_build(X[ids[i, c]], X[i]) for every node i, candidate c. (n, C)."""
+def _score_rows(dist, consts, qc_all, ids):
+    """d_build(X[ids[i, c]], X[i]) for every node i, candidate c. (n, C).
 
-    def one(node_ids, q):
-        safe = jnp.where(node_ids >= 0, node_ids, 0)
-        rows = jax.tree.map(lambda a: a[safe], consts)
-        return dist.score(rows, dist.prep_query(q)).astype(jnp.float32)
+    Plain matmul-form Distances route through the fused gather+score kernel
+    (``repro.kernels.frontier_gather``: MXU matvec per node on TPU, one fused
+    einsum elsewhere); composite/symmetrized distances take the generic
+    pytree path.  ``qc_all`` is the whole database prepped as queries ONCE
+    per build (``jax.vmap(dist.prep_query)(X)``).
+    """
+    safe = jnp.where(ids >= 0, ids, 0)
+    if isinstance(dist, Distance):
+        from repro.kernels.ops import frontier_gather_scores
 
-    return jax.vmap(one)(ids, X)
+        return frontier_gather_scores(
+            dist, safe, qc_all["rep"], qc_all["bias"], consts["rep"], consts["bias"]
+        ).astype(jnp.float32)
+    rows = jax.tree.map(lambda a: a[safe], consts)
+    return jax.vmap(dist.score)(rows, qc_all).astype(jnp.float32)
 
 
 def _dedup_topk(d, ids, K: int):
@@ -47,17 +60,20 @@ def _dedup_topk(d, ids, K: int):
 
 
 def _sampled_reverse(adj, K_rev: int, key):
-    """A sampled fixed-width reverse-neighbor list via colliding scatters."""
+    """A sampled fixed-width reverse-neighbor list via ONE colliding scatter.
+
+    Every edge (src, dst) bids for a randomized slot of ``rev[dst]``; slot
+    collisions are resolved by scatter-max over the source id — a single
+    segment-style scatter whose trace and HLO are independent of K (the old
+    per-column Python loop unrolled into K sequential scatters).
+    """
     n, K = adj.shape
-    rev = jnp.full((n, K_rev), -1, jnp.int32)
-    src = jnp.arange(n, dtype=jnp.int32)
     # randomize slot assignment so collisions evict uniformly across rounds
-    slots = jax.random.randint(key, (K,), 0, K_rev)
-    for k in range(K):
-        dst = adj[:, k]
-        safe = jnp.where(dst >= 0, dst, 0)
-        rev = rev.at[safe, slots[k]].set(jnp.where(dst >= 0, src, rev[safe, slots[k]]))
-    return rev
+    slots = jnp.broadcast_to(jax.random.randint(key, (K,), 0, K_rev), (n, K))
+    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, K))
+    dst = jnp.where(adj >= 0, adj, n)  # invalid edges scatter out of bounds
+    rev = jnp.full((n, K_rev), -1, jnp.int32)
+    return rev.at[dst.reshape(-1), slots.reshape(-1)].max(src.reshape(-1), mode="drop")
 
 
 @functools.partial(
@@ -81,12 +97,13 @@ def build_nndescent(
     n = X.shape[0]
     K = min(K, n - 1)
     consts = dist.prep_scan(X)
+    qc_all = jax.vmap(dist.prep_query)(X)  # whole DB prepped as queries once
     iota = jnp.arange(n, dtype=jnp.int32)
 
     # --- init: random neighbors (exclude self by +1 shift mod n) ---
     key, k0 = jax.random.split(key)
     init_ids = (iota[:, None] + 1 + jax.random.randint(k0, (n, K), 0, n - 1)) % n
-    init_d = _score_rows(dist, consts, init_ids, X)
+    init_d = _score_rows(dist, consts, qc_all, init_ids)
     adj_d, adj = _dedup_topk(init_d, init_ids, K)
 
     def round_(carry, key_r):
@@ -98,7 +115,7 @@ def build_nndescent(
         rnd = jax.random.randint(k2, (n, n_random), 0, n)
         cand = jnp.concatenate([two_hop, rev, rnd], axis=1)
         cand = jnp.where(cand == iota[:, None], -1, cand)  # no self loops
-        cand_d = _score_rows(dist, consts, cand, X)
+        cand_d = _score_rows(dist, consts, qc_all, cand)
         cand_d = jnp.where(cand >= 0, cand_d, INF)
         all_d = jnp.concatenate([adj_d, cand_d], axis=1)
         all_i = jnp.concatenate([adj, cand], axis=1)

@@ -15,6 +15,11 @@ Edge slot convention for eviction under a NON-SYMMETRIC build distance: the
 slot of node j holding neighbor t stores d_build(x_t, x_j) - the left-query
 distance of the neighbor towards the owner - which is exactly the quantity
 the beam search computes when j is the inserted point.
+
+This sequential builder is the REFERENCE construction path: the
+wave-parallel engine (``repro.core.build_engine.build_swgraph_wave``) is
+parity-tested bit-identical to it at wave=1 and is the default through
+``ANNIndex.build`` (build_engine="wave").
 """
 
 from __future__ import annotations

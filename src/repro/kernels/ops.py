@@ -57,9 +57,11 @@ def frontier_gather_scores(dist: Distance, ids, q_rep, q_bias, x_rep, x_bias,
     """(B, R) distances of frontier rows from ALREADY-PREPPED reps.
 
     The batched beam engine calls this once per lock-step with the full
-    (B, frontier*M) candidate block; reps are prepped once outside the loop.
-    ``use_pallas=None`` uses the fused DMA kernel only on TPU (the interpret
-    path is a per-tile Python loop — correct but slow off-TPU).
+    (B, frontier*M) candidate block; NN-descent construction calls it once
+    per refinement round with the (n, C) candidate join (every database row
+    acting as its own query, reps prepped once per build).  ``use_pallas=None``
+    uses the fused DMA kernel only on TPU (the interpret path is a per-tile
+    Python loop — correct but slow off-TPU).
     """
     if use_pallas is True or (use_pallas is None and _on_tpu()):
         return _fs_kernel(

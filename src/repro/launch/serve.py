@@ -23,7 +23,8 @@ from repro.data.synthetic import lda_like_histograms, split_queries
 def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
                     n_queries: int = 256, batch: int = 64, k: int = 10,
                     ef_search: int = 96, index_sym: str = "none",
-                    builder: str = "nndescent", engine: str = "batched",
+                    builder: str = "nndescent", build_engine: str = "wave",
+                    wave: int = 64, engine: str = "batched",
                     frontier: int = 4, n_entries: int = 4, verbose: bool = True):
     key = jax.random.PRNGKey(0)
     data = lda_like_histograms(key, n_db + n_queries, dim)
@@ -32,6 +33,7 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
 
     t0 = time.time()
     idx = ANNIndex.build(X, dist, index_sym=index_sym, builder=builder,
+                         build_engine=build_engine, wave=wave,
                          NN=15, ef_construction=100, n_entries=n_entries,
                          key=jax.random.fold_in(key, 2))
     build_s = time.time() - t0
@@ -84,6 +86,11 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--ef", type=int, default=96)
     ap.add_argument("--index-sym", default="none")
+    ap.add_argument("--builder", default="nndescent", choices=["nndescent", "swgraph"])
+    ap.add_argument("--build-engine", default="wave", choices=["wave", "sequential"],
+                    help="swgraph construction engine (wave-parallel vs reference)")
+    ap.add_argument("--wave", type=int, default=64,
+                    help="points inserted per construction wave (swgraph builder)")
     ap.add_argument("--engine", default="batched", choices=["batched", "reference"])
     ap.add_argument("--frontier", type=int, default=4,
                     help="beam candidates expanded per lock-step (batched engine)")
@@ -93,7 +100,8 @@ def main():
     build_and_serve(distance=args.distance, n_db=args.n_db, dim=args.dim,
                     n_queries=args.queries, batch=args.batch,
                     ef_search=args.ef, index_sym=args.index_sym,
-                    engine=args.engine, frontier=args.frontier,
+                    builder=args.builder, build_engine=args.build_engine,
+                    wave=args.wave, engine=args.engine, frontier=args.frontier,
                     n_entries=args.entries)
 
 

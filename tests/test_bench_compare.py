@@ -1,0 +1,118 @@
+"""CI bench-regression comparator: the gate must catch real regressions
+(an injected 20% q/s drop, any recall drop beyond noise) and stay quiet
+within tolerance.  This is the executable form of the workflow acceptance
+check 'bench-regression demonstrably fails on an injected 20% q/s
+regression'."""
+
+import copy
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])  # repo root for `benchmarks`
+from benchmarks.compare_bench import compare, main  # noqa: E402
+
+
+def _engine_doc():
+    return {
+        "reference_frontier": [
+            {"ef": 32, "qps": 100.0, "recall@10": 0.91},
+            {"ef": 96, "qps": 40.0, "recall@10": 0.977},
+        ],
+        "batched_frontier": [
+            {"frontier": 2, "ef": 96, "compact": 32, "qps": 1000.0, "recall@10": 0.978},
+            {"frontier": 8, "ef": 96, "compact": 32, "qps": 1800.0, "recall@10": 0.979},
+        ],
+    }
+
+
+def _build_doc():
+    return {
+        "sequential": {"pts_per_s": 140.0, "recall@10": 0.998},
+        "wave_frontier": [
+            {"wave": 64, "frontier": 8, "pts_per_s": 1500.0, "recall@10": 0.998},
+        ],
+        "nndescent": {"pts_per_s": 600.0, "recall@10": 0.982},
+    }
+
+
+def test_identical_runs_pass():
+    for doc in (_engine_doc(), _build_doc()):
+        rows, failures, _ = compare(doc, copy.deepcopy(doc), qps_tol=0.15, recall_tol=0.005)
+        assert rows and not failures
+
+
+def test_injected_20pct_qps_regression_fails():
+    fresh = _engine_doc()
+    fresh["batched_frontier"][0]["qps"] *= 0.8  # the acceptance-criteria injection
+    _, failures, _ = compare(_engine_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert len(failures) == 1
+    assert failures[0]["metric"] == "qps"
+    assert failures[0]["config"] == "frontier=2, ef=96, compact=32"
+
+
+def test_5pct_qps_noise_passes():
+    fresh = _engine_doc()
+    for r in fresh["reference_frontier"] + fresh["batched_frontier"]:
+        r["qps"] *= 0.95
+    _, failures, _ = compare(_engine_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert not failures
+
+
+def test_recall_drop_beyond_noise_fails():
+    fresh = _build_doc()
+    fresh["wave_frontier"][0]["recall@10"] -= 0.01
+    _, failures, _ = compare(_build_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert [f["metric"] for f in failures] == ["recall@10"]
+    # within-noise recall wobble passes
+    fresh["wave_frontier"][0]["recall@10"] = _build_doc()["wave_frontier"][0]["recall@10"] - 0.004
+    _, failures, _ = compare(_build_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert not failures
+
+
+def test_build_schema_20pct_throughput_regression_fails():
+    fresh = _build_doc()
+    fresh["wave_frontier"][0]["pts_per_s"] *= 0.8
+    _, failures, _ = compare(_build_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert [f["metric"] for f in failures] == ["pts_per_s"]
+
+
+def test_calibration_absorbs_slower_runner_but_not_engine_regression():
+    # a uniformly 2x-slower runner: everything halves, including the
+    # reference yardstick -> calibrated gate passes
+    fresh = _engine_doc()
+    for r in fresh["reference_frontier"] + fresh["batched_frontier"]:
+        r["qps"] *= 0.5
+    _, failures, cal = compare(_engine_doc(), fresh, qps_tol=0.15, recall_tol=0.005,
+                               calibrate=True)
+    assert not failures and cal == pytest.approx(0.5)
+    # same slow runner plus a real 25% engine-only regression -> caught
+    fresh["batched_frontier"][1]["qps"] *= 0.75
+    _, failures, _ = compare(_engine_doc(), fresh, qps_tol=0.15, recall_tol=0.005,
+                             calibrate=True)
+    assert [f["config"] for f in failures] == ["frontier=8, ef=96, compact=32"]
+
+
+def test_only_matching_configs_compared():
+    fresh = _engine_doc()
+    fresh["batched_frontier"] = fresh["batched_frontier"][:1]  # quick-mode subset
+    rows, failures, _ = compare(_engine_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert not failures
+    assert {r["config"] for r in rows if r["section"] == "batched_frontier"} == {
+        "frontier=2, ef=96, compact=32"
+    }
+
+
+def test_cli_exit_codes_and_summary(tmp_path):
+    base, fresh = _engine_doc(), _engine_doc()
+    fresh["batched_frontier"][0]["qps"] *= 0.8
+    pb, pf = tmp_path / "base.json", tmp_path / "fresh.json"
+    pb.write_text(json.dumps(base))
+    pf.write_text(json.dumps(fresh))
+    summary = tmp_path / "summary.md"
+    rc = main(["--pair", str(pb), str(pf), "--summary", str(summary)])
+    assert rc == 1
+    assert "**FAIL**" in summary.read_text()
+    pf.write_text(json.dumps(base))  # revert the injection -> gate passes
+    assert main(["--pair", str(pb), str(pf)]) == 0
