@@ -1,0 +1,157 @@
+"""Online mutable-index churn benchmark: steady-state insert+delete+query.
+
+Reproduces the ISSUE-3 acceptance workload on KL: build, stream in 25% new
+points while tombstoning 20% of the originals (R rounds of interleaved
+mutations), measure
+
+  * online insert throughput (points/sec, steady-state: min over the
+    post-compile rounds),
+  * query throughput and recall@10 over the tombstoned graph (pre-compact),
+  * compact() cost and post-compact recall,
+  * a fresh ``build_swgraph_wave`` rebuild of the identical surviving set —
+    both the churn-parity yardstick (online recall must track it) and the
+    CI calibration reference (the frozen wave builder, untouched by online
+    changes).
+
+Results land in BENCH_online.json; the CI bench-regression gate compares
+the quick run against benchmarks/baselines/BENCH_online.quick.json.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ANNIndex, knn_scan, recall_at_k
+from repro.core.batched_beam import make_step_searcher, select_entries
+from repro.core.build_engine import build_swgraph_wave
+from repro.core.distances import get_distance
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+NN, EF_C, EF_S, K, WAVE, ROUNDS = 15, 100, 96, 10, 64, 4
+
+
+def run_online(out_path: str = "BENCH_online.json", quick: bool = False):
+    # sizes chosen so each timed phase is well over timer noise (same
+    # rationale as bench_build quick mode)
+    n0, n_q, dim = (2048, 96, 32) if quick else (4096, 128, 32)
+    ins_total, del_total = n0 // 4, n0 // 5  # +25% inserts, -20% deletes
+    per_round = ins_total // ROUNDS
+    key = jax.random.PRNGKey(0)
+    data = lda_like_histograms(key, n0 + n_q + ins_total, dim)
+    Q, rest = split_queries(data, n_q, jax.random.fold_in(key, 1))
+    X, pool = rest[:n0], rest[n0:]
+    dist = get_distance("kl")
+
+    idx = ANNIndex.build(
+        X, dist, builder="swgraph", build_engine="wave", wave=WAVE, NN=NN,
+        ef_construction=EF_C, capacity=n0 + ins_total,
+        key=jax.random.fold_in(key, 2),
+    )
+    online = idx.online
+    rng = np.random.default_rng(0)
+    del_ids = rng.choice(n0, size=del_total, replace=False)
+
+    # -- churn rounds: interleaved inserts + tombstones
+    ins_times = []
+    for r in range(ROUNDS):
+        chunk = pool[r * per_round:(r + 1) * per_round]
+        t0 = time.time()
+        jax.block_until_ready(idx.insert(chunk))
+        ins_times.append(time.time() - t0)
+        idx.delete(del_ids[r * del_total // ROUNDS:(r + 1) * del_total // ROUNDS])
+    idx.delete(del_ids)  # flush any remainder of the 20% (idempotent)
+    insert = {
+        "pts_per_s": round(per_round / min(ins_times[1:]), 1),
+        "first_round_s": round(ins_times[0], 3),  # includes jit compiles
+    }
+    print(f"[online] insert     : {insert['pts_per_s']:7.1f} pts/s steady-state "
+          f"({ROUNDS} rounds of {per_round})")
+
+    # -- query the tombstoned graph (pre-compact)
+    search = idx.searcher(K, EF_S, frontier=2)
+    jax.block_until_ready(search(Q)[0])
+    ts = []
+    for _ in range(3):
+        t0 = time.time()
+        out = search(Q)
+        jax.block_until_ready(out[0])
+        ts.append(time.time() - t0)
+    surv = np.flatnonzero(np.asarray(online.alive))
+    X_surv = online.X[jnp.asarray(surv)]
+    _, true_pos = knn_scan(dist, Q, X_surv, K)
+    true_global = surv[np.asarray(true_pos)]
+    r_churn = recall_at_k(np.asarray(out[1]), true_global)
+    churn_query = {
+        "qps": round(n_q / min(ts), 1),
+        "recall@10": round(float(r_churn), 4),
+    }
+    print(f"[online] churn query: {churn_query['qps']:7.1f} q/s "
+          f"recall={churn_query['recall@10']:.4f} "
+          f"({online.n_alive} alive / {online.n_total} slots)")
+
+    # -- compact + audit
+    t0 = time.time()
+    cstats = idx.compact()
+    compact_s = time.time() - t0
+    _, ids_c, _, _ = search(Q)
+    after_compact = {
+        "recall@10": round(float(recall_at_k(np.asarray(ids_c), true_global)), 4),
+        "compact_s": round(compact_s, 3),
+        "repaired": cstats["repaired"],
+    }
+    print(f"[online] compact    : {compact_s:7.2f}s "
+          f"({cstats['repaired']} repaired) "
+          f"recall={after_compact['recall@10']:.4f}")
+
+    # -- fresh rebuild of the surviving set: parity yardstick + calibration
+    def build():
+        return build_swgraph_wave(dist, X_surv, NN=NN, ef_construction=EF_C,
+                                  wave=WAVE)
+
+    jax.block_until_ready(build())
+    t0 = time.time()
+    adj_f, _ = build()
+    jax.block_until_ready(adj_f)
+    t_rebuild = time.time() - t0
+    entries_f = select_entries(dist, X_surv, 4, jax.random.fold_in(key, 3))
+    fresh = make_step_searcher(dist, adj_f, X_surv, EF_S, K,
+                               entries=entries_f, frontier=2)
+    _, ids_f, _, _ = fresh(Q)
+    r_fresh = recall_at_k(np.asarray(ids_f), np.asarray(true_pos))
+    rebuild = {
+        "pts_per_s": round(X_surv.shape[0] / t_rebuild, 1),
+        "recall@10": round(float(r_fresh), 4),
+    }
+    parity = {
+        "online_after_compact": after_compact["recall@10"],
+        "fresh_rebuild": rebuild["recall@10"],
+        "delta": round(after_compact["recall@10"] - rebuild["recall@10"], 4),
+    }
+    print(f"[online] rebuild    : {rebuild['pts_per_s']:7.1f} pts/s "
+          f"recall={rebuild['recall@10']:.4f} "
+          f"(churn parity delta {parity['delta']:+.4f})")
+
+    result = {
+        "workload": {"distance": "kl", "n_db": n0, "n_queries": n_q, "dim": dim,
+                     "k": K, "NN": NN, "ef_construction": EF_C,
+                     "ef_search": EF_S, "rounds": ROUNDS,
+                     "inserted": ins_total, "deleted": del_total,
+                     "backend": jax.default_backend()},
+        "rebuild": rebuild,
+        "insert": insert,
+        "churn_query": churn_query,
+        "after_compact": after_compact,
+        "churn_parity": parity,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == "__main__":
+    run_online()

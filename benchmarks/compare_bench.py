@@ -46,6 +46,19 @@ SCHEMAS = {
             "nndescent": ((), "pts_per_s"),
         },
     },
+    # online mutable index churn bench: the frozen wave rebuild is the
+    # calibration yardstick; insert throughput, churn-query throughput and
+    # every recall@10 (pre-compact, post-compact, rebuild) are gated.
+    # "after_compact" has no throughput metric — only its recall is checked.
+    "online": {
+        "calibration": ("rebuild", "pts_per_s"),
+        "sections": {
+            "rebuild": ((), "pts_per_s"),
+            "insert": ((), "pts_per_s"),
+            "churn_query": ((), "qps"),
+            "after_compact": ((), "qps"),
+        },
+    },
 }
 
 RECALL = "recall@10"

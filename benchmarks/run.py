@@ -17,7 +17,8 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="reduced combos/sizes (CI mode)")
     ap.add_argument("--only", default=None,
-                    choices=[None, "table3", "fig12", "kernels", "engine", "build"])
+                    choices=[None, "table3", "fig12", "kernels", "engine",
+                             "build", "online"])
     ap.add_argument("--n-db", type=int, default=None)
     ap.add_argument("--n-q", type=int, default=None)
     args = ap.parse_args()
@@ -43,6 +44,12 @@ def main():
         from . import bench_build
 
         bench_build.run_build_engine(quick=args.quick)
+
+    if args.only in (None, "online"):
+        print("\n=== online index: insert/delete/query churn vs fresh rebuild ===")
+        from . import bench_online
+
+        bench_online.run_online(quick=args.quick)
 
     if args.only in (None, "table3"):
         print("\n=== Table 3: filter-and-refine symmetrization vs "

@@ -27,8 +27,9 @@ from .batched_beam import (
     select_entries,
 )
 from .swgraph import build_swgraph
-from .build_engine import build_sharded, build_swgraph_wave
+from .build_engine import build_sharded, build_swgraph_wave, reverse_edge_merge
 from .nndescent import build_nndescent
+from .online import OnlineIndex
 from .filter_refine import filter_and_refine, kc_sweep, rerank
 from .index import ANNIndex
 from .metrics import recall_at_k, speedup_model

@@ -91,6 +91,7 @@ def batched_beam_search(
     frontier: int = 1,
     compact: int = 32,
     n_active=None,  # optional () i32: only nodes < n_active are searchable
+    alive=None,  # optional (n,) bool: tombstoned nodes are never scored
 ):
     """Run B queries to convergence in lock-step.  Returns BatchBeamState.
 
@@ -102,48 +103,85 @@ def batched_beam_search(
     mirroring ``beam_search_impl``'s construction-time prefix masking: the
     wave build engine searches the frozen prefix graph of already-inserted
     points without ever scoring the not-yet-inserted suffix.
+
+    ``alive`` (may be traced) pre-marks every node with ``alive[v] == False``
+    as visited — the online mutable index's tombstone mask.  Dead nodes are
+    never scored, never enter any beam, and never appear in results; entry
+    nodes failing either mask are seeded at +inf with id -1, so a fully
+    tombstoned (or ``n_active=0``) database yields empty (-1 / inf) beams
+    rather than out-of-bounds gathers.
     """
     n, M = neighbors.shape
     E = entries.shape[0]
-    T = frontier
-    if T < 1:
+    if frontier < 1:
         raise ValueError(f"frontier must be >= 1, got {frontier}")
+    T = min(frontier, ef)
     if max_steps is None:
         max_steps = n
+    masked = n_active is not None or alive is not None
 
     # ---- seed: score every entry for every query, keep the best ef
     d0 = score_rows(jnp.broadcast_to(entries[None, :], (B, E))).astype(jnp.float32)
+    if masked:
+        entry_ok = jnp.ones((E,), bool)
+        if n_active is not None:
+            entry_ok &= entries < n_active
+        if alive is not None:
+            entry_ok &= alive[entries]
+        d0 = jnp.where(entry_ok[None, :], d0, INF)
     order0 = jnp.argsort(d0, axis=1)
     take = min(E, ef)
-    beam_d = jnp.full((B, ef), INF, jnp.float32)
-    beam_d = beam_d.at[:, :take].set(jnp.take_along_axis(d0, order0, axis=1)[:, :take])
-    beam_i = jnp.full((B, ef), -1, jnp.int32)
-    beam_i = beam_i.at[:, :take].set(entries[order0][:, :take].astype(jnp.int32))
-    expanded = jnp.ones((B, ef), bool).at[:, :take].set(False)
+    d0_sorted = jnp.take_along_axis(d0, order0, axis=1)[:, :take]
+    i0_sorted = entries[order0][:, :take].astype(jnp.int32)
+    if masked:
+        # blocked entries seed as (inf, -1) padding and are never expanded
+        i0_sorted = jnp.where(jnp.isfinite(d0_sorted), i0_sorted, -1)
+    beam_d = jnp.full((B, ef), INF, jnp.float32).at[:, :take].set(d0_sorted)
+    beam_i = jnp.full((B, ef), -1, jnp.int32).at[:, :take].set(i0_sorted)
+    expanded = jnp.ones((B, ef), bool)
+    if masked:
+        expanded = expanded.at[:, :take].set(~jnp.isfinite(d0_sorted))
+    else:
+        expanded = expanded.at[:, :take].set(False)
     # visited is a bit-packed (B, ceil(n/32)) uint32 set: 32x less state to
     # carry through the loop than a bool mask, and updates become a handful
     # of word-sized ops instead of an O(B*n) scatter.  Seed bits are OR-ed
     # one entry at a time (E is small and static) so duplicate entry ids
     # cannot carry into neighboring bits.
     nw = -(-n // 32)
-    if n_active is None:
+    if not masked:
         seed = jnp.zeros((nw,), jnp.uint32)
     else:
-        # block the suffix: bit v set iff v >= n_active (bits are distinct,
-        # so a plain sum over the word assembles the OR of the 32 lanes)
-        blocked = jnp.arange(nw * 32, dtype=jnp.int32).reshape(nw, 32) >= n_active
+        # block the suffix and the tombstones: bit v set iff v is not
+        # searchable (bits are distinct, so a plain sum over the word
+        # assembles the OR of the 32 lanes)
+        bit_ids = jnp.arange(nw * 32, dtype=jnp.int32)
+        blocked = jnp.zeros((nw * 32,), bool)
+        if n_active is not None:
+            blocked |= bit_ids >= n_active
+        if alive is not None:
+            alive_pad = jnp.pad(alive, (0, nw * 32 - n), constant_values=False)
+            blocked |= ~alive_pad
         lane = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
-        seed = jnp.sum(jnp.where(blocked, lane[None, :], jnp.uint32(0)), axis=1, dtype=jnp.uint32)
+        seed = jnp.sum(
+            jnp.where(blocked.reshape(nw, 32), lane[None, :], jnp.uint32(0)),
+            axis=1,
+            dtype=jnp.uint32,
+        )
     for j in range(E):
         w = entries[j] // 32
         seed = seed.at[w].set(seed[w] | (jnp.uint32(1) << (entries[j] % 32).astype(jnp.uint32)))
     visited = jnp.broadcast_to(seed, (B, nw))
+    if masked:
+        n_evals0 = jnp.broadcast_to(jnp.sum(entry_ok, dtype=jnp.int32), (B,))
+    else:
+        n_evals0 = jnp.full((B,), E, jnp.int32)
     state = BatchBeamState(
         beam_d,
         beam_i,
         expanded,
         visited,
-        jnp.full((B,), E, jnp.int32),
+        n_evals0,
         jnp.zeros((B,), jnp.int32),
         jnp.zeros((B,), bool),
     )

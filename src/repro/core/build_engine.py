@@ -47,6 +47,59 @@ from .distances import Distance
 INF = jnp.inf
 
 
+def reverse_edge_merge(adj, adj_d, owners, cands, d_rev, ok, rounds: int):
+    """Degree-capped reverse-edge scatter-with-eviction merge.
+
+    Applies up to U candidate edges ``owners[u] -> cands[u]`` (slot distance
+    ``d_rev[u] = d_build(x_cand, x_owner)``, the left-query distance of the
+    candidate towards the owner) into the fixed-degree rows of
+    ``adj``/``adj_d``, evicting each owner's farthest edge when the row is
+    full.  Updates are sorted by (owner, distance) and ranked within each
+    owner segment; rank round r scatters its (conflict-free, because owners
+    are distinct within a rank) updates into the farthest-edge slot of the
+    owner rows.  Ascending-order insert-with-evict is a streaming top-M, so
+    per owner the merge keeps the M_max closest of
+    {existing edges} u {candidates}.
+
+    An owner receiving more than ``rounds`` candidates keeps only the
+    closest ``rounds`` of them (the rest are the farthest candidates of the
+    batch — the documented NMSLIB-style relaxation).  Self-loops and
+    already-present neighbors are never written.
+
+    Shared by the wave construction engine and the online mutable index
+    (inserts and compaction repairs).  ``ok`` masks padded update slots.
+    """
+    n = adj.shape[0]
+    U = owners.shape[0]
+    d_rev = jnp.where(ok, d_rev, INF)
+    owner_key = jnp.where(ok, owners, jnp.int32(n))
+    order = jnp.lexsort((d_rev, owner_key))
+    o_j, o_i, o_d, o_ok = (a[order] for a in (owner_key, cands, d_rev, ok))
+    prev = jnp.concatenate([jnp.full((1,), -1, o_j.dtype), o_j[:-1]])
+    idxs = jnp.arange(U, dtype=jnp.int32)
+    rank = idxs - jax.lax.cummax(jnp.where(o_j == prev, 0, idxs))
+
+    def rev_round(r, carry):
+        adj, adj_d = carry
+        m = o_ok & (rank == r)
+        oj = jnp.where(m, o_j, 0)
+        rows_d = adj_d[oj]  # (U, M_max)
+        slot = jnp.argmax(rows_d, axis=1)  # free slots are +inf -> first
+        cur = jnp.take_along_axis(rows_d, slot[:, None], axis=1)[:, 0]
+        # the owner may already hold this candidate as one of ITS forward
+        # edges (mutual intra-wave links; impossible for wave=1, where
+        # owners predate the candidate) — never duplicate it, and never
+        # write a self-loop
+        already = jnp.any(adj[oj] == o_i[:, None], axis=1)
+        do = m & (o_d < cur) & ~already & (o_i != oj)
+        oj_w = jnp.where(do, o_j, n)  # losers scatter out of bounds
+        adj = adj.at[oj_w, slot].set(o_i, mode="drop")
+        adj_d = adj_d.at[oj_w, slot].set(o_d, mode="drop")
+        return adj, adj_d
+
+    return jax.lax.fori_loop(0, rounds, rev_round, (adj, adj_d))
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -175,41 +228,15 @@ def build_swgraph_wave(
         adj = adj.at[dst].set(row_i, mode="drop")
         adj_d = adj_d.at[dst].set(row_d, mode="drop")
 
-        # -- reverse edges: scatter-with-eviction merge.  Flatten the wave's
-        # (owner j, candidate i, d_build(x_i, x_j)) updates, sort by
-        # (owner, distance), rank inside each owner segment; rank round r
-        # applies its updates (distinct owners => conflict-free scatter) into
-        # each owner's farthest slot.
+        # -- reverse edges: flatten the wave's (owner j, candidate i,
+        # d_build(x_i, x_j)) updates and apply them through the shared
+        # scatter-with-eviction merge
         flat_j = ids.reshape(U)
         flat_ok = valid.reshape(U)
         flat_i = jnp.repeat(safe_p, NN)
         safe_j = jnp.where(flat_ok, flat_j, 0)
         d_rev = jnp.where(flat_ok, jax.vmap(rev_score)(flat_i, safe_j), INF)
-        owner_key = jnp.where(flat_ok, flat_j, jnp.int32(n))
-        order = jnp.lexsort((d_rev, owner_key))
-        o_j, o_i, o_d, o_ok = (a[order] for a in (owner_key, flat_i, d_rev, flat_ok))
-        prev = jnp.concatenate([jnp.full((1,), -1, o_j.dtype), o_j[:-1]])
-        idxs = jnp.arange(U, dtype=jnp.int32)
-        rank = idxs - jax.lax.cummax(jnp.where(o_j == prev, 0, idxs))
-
-        def rev_round(r, carry):
-            adj, adj_d = carry
-            m = o_ok & (rank == r)
-            oj = jnp.where(m, o_j, 0)
-            rows_d = adj_d[oj]  # (U, M_max)
-            slot = jnp.argmax(rows_d, axis=1)  # free slots are +inf -> first
-            cur = jnp.take_along_axis(rows_d, slot[:, None], axis=1)[:, 0]
-            # mutual intra-wave links: the owner may already hold this
-            # candidate as one of ITS forward edges (impossible for w=1,
-            # where owners predate the candidate) — never duplicate it
-            already = jnp.any(adj[oj] == o_i[:, None], axis=1)
-            do = m & (o_d < cur) & ~already
-            oj_w = jnp.where(do, o_j, n)  # losers scatter out of bounds
-            adj = adj.at[oj_w, slot].set(o_i, mode="drop")
-            adj_d = adj_d.at[oj_w, slot].set(o_d, mode="drop")
-            return adj, adj_d
-
-        adj, adj_d = jax.lax.fori_loop(0, R, rev_round, (adj, adj_d))
+        adj, adj_d = reverse_edge_merge(adj, adj_d, flat_j, flat_i, d_rev, flat_ok, R)
         return (adj, adj_d), None
 
     (adj, adj_d), _ = jax.lax.scan(wave_step, (adj, adj_d), pids_all)

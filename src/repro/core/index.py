@@ -33,13 +33,20 @@ from .beam_search import make_batched_searcher
 from .build_engine import build_swgraph_wave
 from .filter_refine import rerank
 from .nndescent import build_nndescent
+from .online import OnlineIndex
 from .swgraph import build_swgraph
 from .symmetrize import symmetrized
 
 
 @dataclasses.dataclass
 class ANNIndex:
-    """A built neighborhood-graph index over a database X."""
+    """A built neighborhood-graph index over a database X.
+
+    With a ``capacity`` (set at build time or on the first mutation) the
+    index becomes MUTABLE: ``insert``/``delete``/``compact`` route through
+    ``repro.core.online.OnlineIndex`` and the default batched searcher
+    serves the live (tombstone-masked) graph.
+    """
 
     X: jax.Array
     neighbors: jax.Array  # (n, M) int32
@@ -48,6 +55,9 @@ class ANNIndex:
     query_sym: str
     entries: Optional[jax.Array] = None  # (E,) i32 beam entry points
     build_info: dict = dataclasses.field(default_factory=dict)
+    build_dist: object = None  # index-time distance (defaults to dist)
+    capacity: Optional[int] = None  # mutable-index slot budget
+    online: Optional[OnlineIndex] = None  # created lazily on first mutation
 
     @property
     def entry(self) -> int:
@@ -73,6 +83,7 @@ class ANNIndex:
         M_max: Optional[int] = None,
         nnd_iters: int = 8,
         n_entries: int = 4,
+        capacity: Optional[int] = None,
         key=None,
         natural: Optional[Callable] = None,
     ) -> "ANNIndex":
@@ -83,6 +94,11 @@ class ANNIndex:
         (``build_frontier`` candidates expanded per lock-step, defaulting
         like the wave builder); "sequential" is the one-point-per-step
         reference builder the wave path is parity-tested against.
+
+        ``capacity``: total slot budget for online mutation (inserted points
+        consume slots; tombstones never release them).  Setting it makes the
+        index mutable immediately; otherwise the first ``insert``/``delete``
+        call converts it lazily with a default budget of ``2 * n``.
         """
         build_dist = symmetrized(dist, index_sym, natural=natural)
         search_dist = symmetrized(dist, query_sym, natural=natural) if query_sym != "none" else dist
@@ -124,7 +140,7 @@ class ANNIndex:
             ef_construction=ef_construction,
             mean_degree=float(jnp.mean(degrees.astype(jnp.float32))),
         )
-        return cls(
+        idx = cls(
             X=X,
             neighbors=neighbors,
             dist=dist,
@@ -132,11 +148,68 @@ class ANNIndex:
             query_sym=query_sym,
             entries=entries,
             build_info=info,
+            build_dist=build_dist,
+            capacity=capacity,
         )
+        if capacity is not None:
+            idx.ensure_online()
+        return idx
+
+    # ----------------------------------------------------------------- online
+
+    def ensure_online(self, capacity: Optional[int] = None) -> OnlineIndex:
+        """Convert to a mutable index (idempotent).  See ``OnlineIndex``."""
+        if self.online is None:
+            cap = capacity or self.capacity or 2 * int(self.X.shape[0])
+            self.online = OnlineIndex.from_graph(
+                self.X, self.neighbors, self.build_dist or self.dist,
+                self.search_dist, capacity=cap, entries=self.entries,
+                NN=self.build_info.get("NN") or self.neighbors.shape[1] // 2,
+                ef_construction=self.build_info.get("ef_construction") or 100,
+                wave=self.build_info.get("wave") or 32,
+            )
+            self.capacity = self.online.capacity
+        return self.online
+
+    def insert(self, X_new):
+        """Insert points into the live graph; returns their slot ids."""
+        ids = self.ensure_online().insert(X_new)
+        self._sync_from_online()
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone points by id; returns how many were newly deleted."""
+        n = self.ensure_online().delete(ids)
+        # tombstoning touches only the alive mask — no row data changed, so
+        # skip the O(n) X/neighbors mirroring and resync just the entries
+        self.entries = self.online.entries
+        return n
+
+    def compact(self) -> dict:
+        """Re-link the graph around tombstones (no full rebuild)."""
+        stats = self.ensure_online().compact()
+        self._sync_from_online()
+        return stats
+
+    def _sync_from_online(self):
+        """Mirror the mutable state so X/neighbors stay inspectable (NOTE:
+        the mirrored arrays include tombstoned rows — serving always goes
+        through the alive-masked online searcher)."""
+        o = self.online
+        self.X = o.X[: o.n_total]
+        self.neighbors = o.adj[: o.n_total]
+        self.entries = o.entries
 
     # ----------------------------------------------------------------- search
 
     def _make_searcher(self, dist, ef: int, k: int, engine: str, frontier: int):
+        if self.online is not None:
+            if engine != "batched":
+                raise ValueError(
+                    f"engine {engine!r} does not support the online mutable "
+                    f"index; use engine='batched'"
+                )
+            return self.online.searcher(k, ef, frontier=frontier)
         if engine == "batched":
             return make_step_searcher(dist, self.neighbors, self.X, ef, k,
                                       entries=self.entries, frontier=frontier)
@@ -165,6 +238,18 @@ class ANNIndex:
         k_c = k_c or max(ef_search, k)
         ef = max(ef_search, k_c)
         inner = self._make_searcher(self.search_dist, ef, k_c, engine, frontier)
+
+        if self.online is not None:
+            # not jitted as a whole: the inner searcher must re-read the
+            # live graph state on every call (rerank is jitted separately)
+            online = self.online
+
+            def search(Q):
+                _, cand, n_evals, hops = inner(Q)
+                d, ids = rerank(self.dist, Q, online.X, cand, k)
+                return d, ids, n_evals + jnp.int32(k_c), hops
+
+            return search
 
         @jax.jit
         def search(Q):

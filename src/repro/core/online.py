@@ -1,0 +1,490 @@
+"""Online mutable index: incremental inserts, tombstone deletes, compaction.
+
+A production retrieval system cannot rebuild its neighborhood graph from
+scratch every time the corpus changes.  NMSLIB treats SW-graph insertion as
+inherently online (Naidan & Boytsov) — and the wave construction engine
+(PR 2) already searches a *frozen prefix* of the graph, which is exactly the
+primitive incremental insertion needs.  ``OnlineIndex`` wraps a built graph
+with capacity-padded arrays and keeps it live:
+
+  insert(X_new)  new points land in the next free slots and are connected
+                 in waves of W through ``batched_beam_search`` against the
+                 frozen graph of already-live points (``alive`` masking —
+                 the online generalisation of the build engine's
+                 ``n_active`` prefix masking), plus intra-wave brute-force
+                 links and the shared degree-capped
+                 ``reverse_edge_merge``.  Amortised cost per point matches
+                 wave construction; no existing edge is recomputed.
+
+  delete(ids)    tombstoning only: ``alive[ids] = False``.  The batched
+                 beam engine pre-marks dead nodes visited, so they are
+                 never scored, never enter a beam, and never appear in
+                 results.  Edges through tombstones are NOT followed — a
+                 heavily tombstoned region degrades recall until
+                 ``compact()`` repairs it.  Slots are never reused.
+
+  compact()      drops every edge into (and out of) tombstoned nodes, then
+                 re-links the tombstones' surviving neighbors with repair
+                 beam searches over the alive graph — each affected node
+                 merges fresh candidates into its row (streaming top-M) and
+                 re-applies reverse edges, restoring the connectivity the
+                 tombstones carried without a full rebuild.
+
+Searches run through the same step-synchronized engine with the ``alive``
+mask, so serving, inserting, and repairing all share one traversal code
+path.  All jitted state transitions are fixed-shape in ``capacity``: a
+steady-state insert/delete/query churn triggers no recompilation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batched_beam import batched_beam_search
+from .build_engine import reverse_edge_merge
+
+INF = jnp.inf
+
+
+# ---------------------------------------------------------------------------
+# jitted state transitions (module-level so the cache is shared per config)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("dist",))
+def _edge_distances(dist, adj, consts, qc_all):
+    """Slot distances d_build(x_t, x_j) for every edge j -> t of ``adj``."""
+    safe = jnp.where(adj >= 0, adj, 0)
+    rows = jax.tree.map(lambda a: a[safe], consts)  # (n, M, ...)
+    d = jax.vmap(dist.score)(rows, qc_all)  # (n, M)
+    return jnp.where(adj >= 0, d.astype(jnp.float32), INF)
+
+
+@functools.partial(jax.jit, static_argnames=("dist", "NN", "ef", "T", "L", "R"))
+def _insert_wave(dist, adj, adj_d, consts, qc_all, alive, entries, pids, ok_pt,
+                 NN, ef, T, L, R):
+    """Connect one wave of freshly written points against the alive graph.
+
+    Mirrors ``build_engine.wave_step`` with ``alive`` masking in place of the
+    prefix ``n_active``: wave points are not yet alive, so they see exactly
+    the frozen pre-wave graph (NMSLIB's relaxed insert ordering).  Returns
+    (adj, adj_d, alive) with the wave's points marked alive.
+    """
+    cap, M_max = adj.shape
+    W = pids.shape[0]
+    safe_p = jnp.where(ok_pt, pids, 0)
+    qc = jax.tree.map(lambda a: a[safe_p], qc_all)
+
+    def score_rows(ids):
+        rows = jax.tree.map(lambda a: a[ids], consts)
+        return jax.vmap(dist.score)(rows, qc)
+
+    st = batched_beam_search(adj, score_rows, entries, W, ef, frontier=T, alive=alive)
+    ids = st.beam_i[:, :NN]  # (W, NN)
+    ds = st.beam_d[:, :NN]
+
+    if L > 0:
+        # intra-wave links: the alive mask hides wave-mates from the beam,
+        # so score the wave against itself (one exact (W, W) block) and let
+        # each point's closest L wave-mates compete for the forward slots.
+        rows_w = jax.tree.map(lambda a: a[safe_p], consts)
+        D_intra = jax.vmap(lambda q: dist.score(rows_w, q))(qc).astype(jnp.float32)
+        iw = jnp.arange(W)
+        bad = (iw[None, :] == iw[:, None]) | ~ok_pt[None, :] | ~ok_pt[:, None]
+        D_intra = jnp.where(bad, INF, D_intra)
+        negi, posi = jax.lax.top_k(-D_intra, L)
+        intra_i = jnp.where(jnp.isfinite(negi), safe_p[posi], -1)
+        cand_i = jnp.concatenate([ids, intra_i], axis=1)
+        cand_d = jnp.concatenate([jnp.where(ids >= 0, ds, INF), -negi], axis=1)
+        negf, sel = jax.lax.top_k(-cand_d, NN)  # beam ids and wave-mate
+        ds = -negf  # ids are disjoint (live graph vs wave), so no dedup here
+        ids = jnp.take_along_axis(cand_i, sel, axis=1)
+    valid = (ids >= 0) & jnp.isfinite(ds) & ok_pt[:, None]
+
+    # forward edges: one dropped-padding scatter for the whole wave
+    row_i = jnp.full((W, M_max), -1, jnp.int32).at[:, :NN].set(jnp.where(valid, ids, -1))
+    row_d = jnp.full((W, M_max), INF, jnp.float32).at[:, :NN].set(jnp.where(valid, ds, INF))
+    dst = jnp.where(ok_pt, pids, cap)  # out-of-bounds rows are dropped
+    adj = adj.at[dst].set(row_i, mode="drop")
+    adj_d = adj_d.at[dst].set(row_d, mode="drop")
+
+    # reverse edges through the shared scatter-with-eviction merge
+    U = W * NN
+    flat_j = ids.reshape(U)
+    flat_ok = valid.reshape(U)
+    flat_i = jnp.repeat(safe_p, NN)
+    safe_j = jnp.where(flat_ok, flat_j, 0)
+    d_rev = jax.vmap(lambda i, j: _rev_score(dist, consts, qc_all, i, j))(flat_i, safe_j)
+    adj, adj_d = reverse_edge_merge(adj, adj_d, flat_j, flat_i, d_rev, flat_ok, R)
+
+    alive = alive.at[dst].set(True, mode="drop")
+    return adj, adj_d, alive
+
+
+def _rev_score(dist, consts, qc_all, i, j):
+    """d_build(x_i, x_j): i the candidate (left), j the owner (query side)."""
+    rows_i = jax.tree.map(lambda a: a[i[None]], consts)
+    qc_j = jax.tree.map(lambda a: a[j], qc_all)
+    return dist.score(rows_i, qc_j)[0].astype(jnp.float32)
+
+
+@jax.jit
+def _drop_dead_edges(adj, adj_d, alive, n_total):
+    """Remove every edge into or out of a tombstone; report affected nodes.
+
+    Returns (adj, adj_d, affected) where ``affected`` flags alive nodes that
+    either pointed at a tombstone (they lost outgoing edges) or were pointed
+    at by one (they lost incoming paths) — the set ``compact`` re-links.
+    """
+    cap = adj.shape[0]
+    dead = (jnp.arange(cap) < n_total) & ~alive
+    safe = jnp.where(adj >= 0, adj, 0)
+    tgt_dead = (adj >= 0) & dead[safe]
+    points_to_dead = jnp.any(tgt_dead, axis=1)
+    # targets of dead rows lose incoming paths
+    src_dead = dead[:, None] & (adj >= 0)
+    pointed = jnp.zeros((cap,), bool).at[jnp.where(src_dead, adj, cap)].max(
+        src_dead, mode="drop"
+    )
+    n_dropped = jnp.sum(tgt_dead, dtype=jnp.int32)
+    adj = jnp.where(tgt_dead, -1, adj)
+    adj_d = jnp.where(tgt_dead, INF, adj_d)
+    # clear tombstoned rows entirely: they drop out of the graph
+    adj = jnp.where(dead[:, None], -1, adj)
+    adj_d = jnp.where(dead[:, None], INF, adj_d)
+    affected = alive & (points_to_dead | pointed)
+    return adj, adj_d, affected, n_dropped
+
+
+@functools.partial(jax.jit, static_argnames=("dist", "NN", "ef", "T", "R"))
+def _repair_wave(dist, adj, adj_d, consts, qc_all, alive, entries, pids, ok_pt,
+                 NN, ef, T, R):
+    """Re-link one wave of tombstone-adjacent nodes over the alive graph.
+
+    Each node u searches the alive graph (u itself masked out of its own
+    candidates), merges the NN best fresh candidates with its surviving
+    edges (streaming top-M_max), and re-applies reverse edges so nodes that
+    lost incoming paths through tombstones regain them.
+    """
+    cap, M_max = adj.shape
+    W = pids.shape[0]
+    safe_p = jnp.where(ok_pt, pids, 0)
+    qc = jax.tree.map(lambda a: a[safe_p], qc_all)
+
+    def score_rows(ids):
+        rows = jax.tree.map(lambda a: a[ids], consts)
+        return jax.vmap(dist.score)(rows, qc)
+
+    st = batched_beam_search(adj, score_rows, entries, W, ef, frontier=T, alive=alive)
+    # the repair query u is alive, so the beam finds u itself (self-distance
+    # ~0): take NN+1 candidates and void the self-match before keeping NN
+    take = min(NN + 1, ef)
+    cand_i = st.beam_i[:, :take]
+    cand_d = jnp.where(cand_i == safe_p[:, None], INF, st.beam_d[:, :take])
+    neg, sel = jax.lax.top_k(-cand_d, NN)
+    cand_d = -neg
+    cand_i = jnp.take_along_axis(cand_i, sel, axis=1)
+    row_i = adj[safe_p]  # (W, M_max) surviving edges (post drop)
+    dup = jnp.any(cand_i[:, :, None] == row_i[:, None, :], axis=2)
+    cand_ok = (cand_i >= 0) & jnp.isfinite(cand_d) & ~dup & ok_pt[:, None]
+    cand_d = jnp.where(cand_ok, cand_d, INF)
+
+    # merged row: streaming top-M_max of {surviving edges} u {candidates}
+    all_d = jnp.concatenate([adj_d[safe_p], cand_d], axis=1)
+    all_i = jnp.concatenate([row_i, jnp.where(cand_ok, cand_i, -1)], axis=1)
+    neg2, sel2 = jax.lax.top_k(-all_d, M_max)
+    new_d = -neg2
+    new_i = jnp.where(jnp.isfinite(new_d), jnp.take_along_axis(all_i, sel2, axis=1), -1)
+    new_d = jnp.where(jnp.isfinite(new_d), new_d, INF)
+    dst = jnp.where(ok_pt, pids, cap)
+    adj = adj.at[dst].set(new_i, mode="drop")
+    adj_d = adj_d.at[dst].set(new_d, mode="drop")
+
+    # reverse edges: u into its fresh candidates, same insert-time semantics
+    U = W * NN
+    flat_j = cand_i.reshape(U)
+    flat_ok = cand_ok.reshape(U)
+    flat_i = jnp.repeat(safe_p, NN)
+    safe_j = jnp.where(flat_ok, flat_j, 0)
+    d_rev = jax.vmap(lambda i, j: _rev_score(dist, consts, qc_all, i, j))(flat_i, safe_j)
+    return reverse_edge_merge(adj, adj_d, flat_j, flat_i, d_rev, flat_ok, R)
+
+
+@functools.partial(jax.jit, static_argnames=("dist", "k", "ef", "T", "compact"))
+def _masked_search(dist, Q, consts, adj, alive, entries, k, ef, T, compact):
+    """Alive-masked batched beam search over the capacity-padded graph."""
+    B = Q.shape[0]
+    qc = jax.vmap(dist.prep_query)(Q)
+
+    def score_rows(ids):
+        rows = jax.tree.map(lambda a: a[ids], consts)
+        return jax.vmap(dist.score)(rows, qc)
+
+    st = batched_beam_search(adj, score_rows, entries, B, ef, frontier=T,
+                             compact=compact, alive=alive)
+    return st.beam_d[:, :k], st.beam_i[:, :k], st.n_evals, st.hops
+
+
+# ---------------------------------------------------------------------------
+# the mutable index
+# ---------------------------------------------------------------------------
+
+
+class OnlineIndex:
+    """A mutable neighborhood-graph index over capacity-padded arrays.
+
+    State: ``X (capacity, m)``, ``adj``/``adj_d (capacity, M_max)``,
+    ``alive (capacity,) bool`` and the host-side high-water mark
+    ``n_total`` (slots 0..n_total-1 have been inserted at some point; a slot
+    is live iff ``alive`` — tombstoned slots are never reused).  All device
+    arrays are fixed-shape, so churn never recompiles.
+    """
+
+    def __init__(self, X, adj, adj_d, alive, n_total, build_dist, search_dist,
+                 entries, *, NN, ef_construction=100, wave=32, frontier=4,
+                 rev_rounds=None, seed=0):
+        cap, M_max = adj.shape
+        assert X.shape[0] == cap and alive.shape == (cap,)
+        self.build_dist = build_dist
+        self.search_dist = search_dist if search_dist is not None else build_dist
+        self.capacity = int(cap)
+        self.M_max = int(M_max)
+        self.NN = int(min(NN, M_max))
+        self.ef_construction = int(max(ef_construction, self.NN))
+        self.wave = int(max(1, wave))
+        self.frontier = int(max(1, frontier))
+        self.rev_rounds = int(min(self.wave, 8 if rev_rounds is None else rev_rounds))
+        self.X = X
+        self.adj = adj
+        self.adj_d = adj_d
+        self.alive = alive
+        self.n_total = int(n_total)
+        self.consts = build_dist.prep_scan(X)
+        self.qc_all = jax.vmap(build_dist.prep_query)(X)
+        self.entries = jnp.asarray(np.asarray(entries, np.int32))
+        self._rng = np.random.default_rng(seed)
+        self._sconsts_cache = None  # search-dist prep_scan, maintained per-row
+
+    # ------------------------------------------------------------- construct
+
+    @classmethod
+    def from_graph(cls, X, neighbors, build_dist, search_dist=None, *,
+                   capacity=None, entries=None, NN=None, ef_construction=100,
+                   wave=32, frontier=4, rev_rounds=None, seed=0):
+        """Wrap a built ``(X, neighbors)`` graph in a mutable index.
+
+        ``capacity`` (default ``2 * n``) bounds the lifetime number of
+        inserted points (tombstoned slots are not reused).  Slot distances
+        are recomputed once from the build distance, so eviction decisions
+        after wrapping are identical to the ones the builder would make.
+        """
+        X = jnp.asarray(X)
+        neighbors = jnp.asarray(neighbors, jnp.int32)
+        n, M_max = neighbors.shape
+        cap = int(capacity) if capacity is not None else 2 * n
+        if cap < n:
+            raise ValueError(f"capacity {cap} < current database size {n}")
+        X_pad = jnp.zeros((cap, X.shape[1]), X.dtype).at[:n].set(X)
+        adj = jnp.full((cap, M_max), -1, jnp.int32).at[:n].set(neighbors)
+        alive = jnp.zeros((cap,), bool).at[:n].set(True)
+        if entries is None:
+            entries = jnp.zeros((1,), jnp.int32)
+        self = cls(
+            X_pad, adj, jnp.full((cap, M_max), INF, jnp.float32), alive, n,
+            build_dist, search_dist, entries, NN=NN if NN is not None else M_max // 2,
+            ef_construction=ef_construction, wave=wave, frontier=frontier,
+            rev_rounds=rev_rounds, seed=seed,
+        )
+        self.adj_d = _edge_distances(build_dist, self.adj, self.consts, self.qc_all)
+        return self
+
+    # ------------------------------------------------------------ properties
+
+    @property
+    def n_alive(self) -> int:
+        return int(jnp.sum(self.alive, dtype=jnp.int32))
+
+    @property
+    def free_slots(self) -> int:
+        return self.capacity - self.n_total
+
+    # ------------------------------------------------------------- mutation
+
+    def insert(self, X_new) -> np.ndarray:
+        """Insert new points; returns their assigned (stable) slot ids.
+
+        Points are connected in waves of ``self.wave`` by frozen-graph beam
+        searches + intra-wave links + the shared reverse-edge merge — the
+        online continuation of wave construction.  Raises ``ValueError``
+        when the batch does not fit in the remaining capacity.
+        """
+        X_new = jnp.asarray(X_new)
+        if X_new.ndim == 1:
+            X_new = X_new[None, :]
+        k = int(X_new.shape[0])
+        if k == 0:
+            return np.zeros((0,), np.int64)
+        if self.n_total + k > self.capacity:
+            raise ValueError(
+                f"insert of {k} points overflows capacity "
+                f"{self.capacity} (n_total={self.n_total}); "
+                f"grow the index with a larger capacity or compact offline"
+            )
+        ids = np.arange(self.n_total, self.n_total + k)
+        ids_j = jnp.asarray(ids, jnp.int32)
+        self.X = self.X.at[ids_j].set(X_new)
+        new_consts = self.build_dist.prep_scan(X_new)
+        self.consts = jax.tree.map(
+            lambda a, r: a.at[ids_j].set(r), self.consts, new_consts
+        )
+        new_qc = jax.vmap(self.build_dist.prep_query)(X_new)
+        self.qc_all = jax.tree.map(lambda a, r: a.at[ids_j].set(r), self.qc_all, new_qc)
+        if self._sconsts_cache is not None:
+            # keep the search-dist constants in lock-step row-by-row instead
+            # of re-prepping all `capacity` rows on the next query
+            self._sconsts_cache = jax.tree.map(
+                lambda a, r: a.at[ids_j].set(r),
+                self._sconsts_cache, self.search_dist.prep_scan(X_new),
+            )
+
+        W = min(self.wave, k)
+        T = max(1, min(self.frontier, self.ef_construction))
+        L = min(self.NN, W - 1)
+        for lo in range(0, k, W):
+            chunk = ids[lo:lo + W]
+            pids = np.full((W,), self.capacity, np.int32)
+            pids[: len(chunk)] = chunk
+            ok_pt = pids < self.capacity
+            if not bool(np.asarray(self.alive[self.entries]).any()):
+                # every entry is tombstoned (e.g. after delete-all): adopt
+                # whatever is alive — n_total already covers the preceding
+                # waves, so later waves can reach earlier ones
+                self._refresh_entries()
+            self.adj, self.adj_d, self.alive = _insert_wave(
+                self.build_dist, self.adj, self.adj_d, self.consts, self.qc_all,
+                self.alive, self.entries, jnp.asarray(pids), jnp.asarray(ok_pt),
+                NN=self.NN, ef=self.ef_construction, T=T, L=L, R=self.rev_rounds,
+            )
+            self.n_total = int(chunk[-1]) + 1  # advance the high-water mark
+        self._refresh_entries()
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone points by id; returns how many were newly deleted.
+
+        Dead nodes stop appearing in results immediately (the engine's
+        ``alive`` mask); their edges keep occupying graph slots until
+        ``compact()``.  Unknown / already-dead ids are ignored.
+        """
+        ids = np.unique(np.asarray(ids, np.int64).reshape(-1))
+        ids = ids[(ids >= 0) & (ids < self.n_total)]
+        if len(ids) == 0:
+            return 0
+        ids_j = jnp.asarray(ids, jnp.int32)
+        was_alive = int(jnp.sum(self.alive[ids_j], dtype=jnp.int32))
+        if was_alive:
+            self.alive = self.alive.at[ids_j].set(False)
+            self._refresh_entries()
+        return was_alive
+
+    def compact(self) -> dict:
+        """Repair the graph around tombstones (no full rebuild).
+
+        Drops every edge into/out of dead nodes, then re-links each
+        surviving node that was adjacent to a tombstone via a repair beam
+        search + reverse-edge merge.  Tombstoned slots stay retired.
+        """
+        adj, adj_d, affected, n_dropped = _drop_dead_edges(
+            self.adj, self.adj_d, self.alive, jnp.int32(self.n_total)
+        )
+        self.adj, self.adj_d = adj, adj_d
+        affected_ids = np.flatnonzero(np.asarray(affected))
+        stats = {
+            "tombstones": self.n_total - self.n_alive,
+            "dead_edges_dropped": int(n_dropped),
+            "repaired": int(len(affected_ids)),
+        }
+        if len(affected_ids) == 0:
+            return stats
+        W = min(self.wave, len(affected_ids))
+        T = max(1, min(self.frontier, self.ef_construction))
+        for lo in range(0, len(affected_ids), W):
+            chunk = affected_ids[lo:lo + W]
+            pids = np.full((W,), self.capacity, np.int32)
+            pids[: len(chunk)] = chunk
+            self.adj, self.adj_d = _repair_wave(
+                self.build_dist, self.adj, self.adj_d, self.consts, self.qc_all,
+                self.alive, self.entries, jnp.asarray(pids),
+                jnp.asarray(pids < self.capacity),
+                NN=self.NN, ef=self.ef_construction, T=T, R=self.rev_rounds,
+            )
+        return stats
+
+    # -------------------------------------------------------------- serving
+
+    def _search_consts(self):
+        if self.search_dist is self.build_dist:
+            return self.consts
+        if self._sconsts_cache is None:
+            # computed in full exactly once; insert() then maintains the
+            # touched rows incrementally (deletes/compaction change no rows)
+            self._sconsts_cache = self.search_dist.prep_scan(self.X)
+        return self._sconsts_cache
+
+    def searcher(self, k: int, ef_search: int, frontier: int = 2, compact: int = 32):
+        """Batched alive-masked searcher: ``search(Q) -> (d, ids, evals, hops)``.
+
+        The returned callable reads the CURRENT index state on every call —
+        results always reflect the latest inserts and deletes.  Ids are
+        stable slot ids; rows with fewer than k alive reachable points pad
+        with (-1, inf).
+        """
+        ef = max(ef_search, k)
+        T = max(1, min(frontier, ef))
+
+        def search(Q):
+            return _masked_search(
+                self.search_dist, Q, self._search_consts(), self.adj, self.alive,
+                self.entries, k=k, ef=ef, T=T, compact=compact,
+            )
+
+        return search
+
+    def search(self, Q, k: int = 10, ef_search: int = 64, frontier: int = 2):
+        return self.searcher(k, ef_search, frontier)(Q)
+
+    # ------------------------------------------------------------ internals
+
+    def _refresh_entries(self):
+        """Keep entry points alive: dead entries are replaced by random live
+        nodes (uniform spread); with nothing alive the entries stay
+        tombstoned and the engine returns well-defined empty results."""
+        E = int(self.entries.shape[0])
+        entries_np = np.asarray(self.entries)
+        # cheap steady-state path: an E-element gather instead of pulling
+        # the whole (capacity,) mask to host on every mutation
+        entry_alive = np.asarray(self.alive[self.entries])
+        if entry_alive.all() and len(set(entries_np.tolist())) == E:
+            return
+        alive_np = np.asarray(self.alive)
+        keep = []
+        for e, ok in zip(entries_np.tolist(), entry_alive.tolist()):
+            if ok and e not in keep:
+                keep.append(int(e))
+        if len(keep) < E:
+            alive_ids = np.flatnonzero(alive_np[: self.n_total])
+            pool = np.setdiff1d(alive_ids, np.asarray(keep, np.int64))
+            if len(pool):
+                picked = self._rng.choice(
+                    len(pool), size=min(E - len(keep), len(pool)), replace=False
+                )
+                keep += [int(pool[j]) for j in np.sort(picked)]
+        while len(keep) < E:
+            # pad with tombstoned slots — masked to (inf, -1) by the engine
+            dead_ids = np.flatnonzero(~alive_np[: max(self.n_total, 1)])
+            keep.append(int(dead_ids[0]) if len(dead_ids) else 0)
+        self.entries = jnp.asarray(np.asarray(keep[:E], np.int32))

@@ -5,6 +5,13 @@ Single-host mode runs the full pipeline on one device; with >1 local
 devices it builds per-shard subgraphs and serves scatter-gather queries
 through repro.core.distributed (the 1000-node architecture, DESIGN.md
 SS2.4, exercised at container scale).
+
+Mutation endpoints (``--churn-rounds`` > 0): the index is built with a
+``--capacity`` slot budget and kept LIVE through rounds of interleaved
+``insert`` / ``delete`` / query traffic (the online mutable index,
+repro.core.online); each round reports mutation throughput and query
+latency, and the loop ends with a ``compact()`` + recall audit against an
+exact scan of the surviving set.
 """
 
 from __future__ import annotations
@@ -20,21 +27,97 @@ from repro.core.metrics import speedup_model
 from repro.data.synthetic import lda_like_histograms, split_queries
 
 
+def run_churn(idx, Q, pool, *, rounds: int, insert_n: int, delete_n: int,
+              batch: int, k: int, ef_search: int, frontier: int,
+              verbose: bool = True):
+    """Steady-state mutation endpoints: insert/delete/query churn rounds.
+
+    ``pool``: (rounds * insert_n, m) fresh points to stream in.  Deletes
+    draw uniformly from the currently alive ids.  Returns per-phase
+    throughput plus a post-churn, post-compact recall audit against an
+    exact scan of the surviving set.
+    """
+    online = idx.ensure_online()
+    dist = idx.dist
+    search = idx.searcher(k, ef_search, frontier=frontier)
+    jax.block_until_ready(search(Q[:batch])[0])  # steady-state timings
+    rng = np.random.default_rng(0)
+    ins_t, del_t, q_t, n_ins, n_del = 0.0, 0.0, [], 0, 0
+    for r in range(rounds):
+        chunk = pool[r * insert_n:(r + 1) * insert_n]
+        t0 = time.time()
+        jax.block_until_ready(idx.insert(chunk))
+        ins_t += time.time() - t0
+        n_ins += chunk.shape[0]
+
+        alive_ids = np.flatnonzero(np.asarray(online.alive))
+        victims = rng.choice(alive_ids, size=min(delete_n, len(alive_ids)),
+                             replace=False)
+        t0 = time.time()
+        idx.delete(victims)
+        jax.block_until_ready(online.alive)
+        del_t += time.time() - t0
+        n_del += len(victims)
+
+        qb = Q[(r * batch) % max(1, Q.shape[0] - batch):][:batch]
+        t0 = time.time()
+        jax.block_until_ready(search(qb)[0])
+        q_t.append((time.time() - t0) / qb.shape[0])
+
+    t0 = time.time()
+    compact_stats = idx.compact()
+    compact_s = time.time() - t0
+
+    # recall audit on the surviving set (exact scan ground truth)
+    surv = np.flatnonzero(np.asarray(online.alive))
+    _, true_pos = knn_scan(dist, Q, online.X[surv], k)
+    true_global = surv[np.asarray(true_pos)]
+    _, ids, _, _ = search(Q)
+    stats = {
+        "rounds": rounds,
+        "inserted": n_ins,
+        "deleted": n_del,
+        "inserts_per_s": round(n_ins / max(ins_t, 1e-9), 1),
+        "deletes_per_s": round(n_del / max(del_t, 1e-9), 1),
+        "churn_p50_latency_ms": round(1e3 * float(np.percentile(q_t, 50)), 3),
+        "compact_s": round(compact_s, 3),
+        "compact_repaired": compact_stats["repaired"],
+        "recall@k_after_churn": round(
+            recall_at_k(np.asarray(ids), true_global), 4),
+        "n_alive": online.n_alive,
+        "capacity_used": online.n_total,
+    }
+    if verbose:
+        print(f"[serve/churn] {stats}")
+    return stats
+
+
 def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
                     n_queries: int = 256, batch: int = 64, k: int = 10,
                     ef_search: int = 96, index_sym: str = "none",
                     builder: str = "nndescent", build_engine: str = "wave",
                     wave: int = 64, engine: str = "batched",
-                    frontier: int = 4, n_entries: int = 4, verbose: bool = True):
+                    frontier: int = 4, n_entries: int = 4,
+                    capacity: int | None = None, churn_rounds: int = 0,
+                    churn_insert: int = 256, churn_delete: int = 200,
+                    verbose: bool = True):
     key = jax.random.PRNGKey(0)
-    data = lda_like_histograms(key, n_db + n_queries, dim)
-    Q, X = split_queries(data, n_queries, jax.random.fold_in(key, 1))
+    pool_n = churn_rounds * churn_insert
+    data = lda_like_histograms(key, n_db + n_queries + pool_n, dim)
+    Q, rest = split_queries(data, n_queries, jax.random.fold_in(key, 1))
+    X, pool = rest[:n_db], rest[n_db:]
     dist = get_distance(distance)
+    if churn_rounds > 0 and capacity is None:
+        capacity = n_db + pool_n
+    if capacity is not None and engine != "batched":
+        raise ValueError("mutable (--capacity / --churn-rounds) serving "
+                         "requires --engine batched")
 
     t0 = time.time()
     idx = ANNIndex.build(X, dist, index_sym=index_sym, builder=builder,
                          build_engine=build_engine, wave=wave,
                          NN=15, ef_construction=100, n_entries=n_entries,
+                         capacity=capacity,
                          key=jax.random.fold_in(key, 2))
     build_s = time.time() - t0
     search = idx.searcher(k, ef_search, engine=engine, frontier=frontier)
@@ -74,6 +157,12 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
     if verbose:
         print(f"[serve] dist={distance} index_sym={index_sym} n={n_db} "
               f"-> {stats}")
+    if churn_rounds > 0:
+        stats["churn"] = run_churn(
+            idx, Q, pool, rounds=churn_rounds, insert_n=churn_insert,
+            delete_n=churn_delete, batch=batch, k=k, ef_search=ef_search,
+            frontier=frontier, verbose=verbose,
+        )
     return stats
 
 
@@ -96,13 +185,26 @@ def main():
                     help="beam candidates expanded per lock-step (batched engine)")
     ap.add_argument("--entries", type=int, default=4,
                     help="entry points seeded per query (medoid + random)")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="mutable-index slot budget (enables insert/delete; "
+                         "defaults to n_db + total churn inserts)")
+    ap.add_argument("--churn-rounds", type=int, default=0,
+                    help="rounds of steady-state insert/delete/query churn "
+                         "after the initial serve phase")
+    ap.add_argument("--churn-insert", type=int, default=256,
+                    help="points inserted per churn round")
+    ap.add_argument("--churn-delete", type=int, default=200,
+                    help="points tombstoned per churn round")
     args = ap.parse_args()
     build_and_serve(distance=args.distance, n_db=args.n_db, dim=args.dim,
                     n_queries=args.queries, batch=args.batch,
                     ef_search=args.ef, index_sym=args.index_sym,
                     builder=args.builder, build_engine=args.build_engine,
                     wave=args.wave, engine=args.engine, frontier=args.frontier,
-                    n_entries=args.entries)
+                    n_entries=args.entries, capacity=args.capacity,
+                    churn_rounds=args.churn_rounds,
+                    churn_insert=args.churn_insert,
+                    churn_delete=args.churn_delete)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,76 @@
+"""Shared structural invariant checkers for fixed-degree neighborhood graphs.
+
+Used by the construction-engine tests AND the online mutable-index tests so
+both paths (batch build and incremental insert/delete/compact) are held to
+the identical contract:
+
+  * adjacency is (rows, M_max) int32 with -1 padding,
+  * every id is in [-1, n),
+  * no self-loops,
+  * no duplicate neighbor ids within a row (degree cap M_max is structural),
+  * optionally: no edge may point at a forbidden (e.g. tombstoned) node,
+  * optionally: slot distances are finite exactly on the occupied slots.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def check_adjacency_invariants(adj, n, M_max, forbidden=None, adj_d=None, rows=None):
+    """Assert the fixed-degree adjacency invariants.
+
+    ``adj``: (R, M_max) int array (any array-like).  ``n``: exclusive upper
+    bound for valid ids.  ``forbidden``: optional iterable of node ids no
+    edge may target (tombstones after compact).  ``adj_d``: optional slot
+    distances that must be finite exactly where ``adj >= 0``.  ``rows``:
+    optional explicit row ids (defaults to 0..R-1) so callers can check a
+    slice of a capacity-padded adjacency.
+    """
+    a = np.asarray(adj)
+    assert a.ndim == 2 and a.shape[1] == M_max, a.shape
+    assert a.min() >= -1 and a.max() < n, (a.min(), a.max(), n)
+    row_ids = np.arange(a.shape[0]) if rows is None else np.asarray(rows)
+    assert not (a == row_ids[:, None]).any(), "self loop"
+    for i, row in zip(row_ids, a):
+        r = row[row >= 0]
+        assert len(set(r.tolist())) == len(r), f"duplicate ids in row {i}: {r}"
+    if forbidden is not None:
+        forbidden = np.asarray(list(forbidden))
+        if forbidden.size:
+            hit = np.isin(a, forbidden) & (a >= 0)
+            assert not hit.any(), (
+                f"edges into forbidden nodes: rows {row_ids[hit.any(axis=1)]}"
+            )
+    if adj_d is not None:
+        d = np.asarray(adj_d)
+        assert d.shape == a.shape
+        occupied = a >= 0
+        assert np.isfinite(d[occupied]).all(), "occupied slot with non-finite distance"
+        assert np.isinf(d[~occupied]).all(), "free slot with finite distance"
+
+
+def check_merge_only_added_submitted_edges(adj_before, adj_after, owners, cands, ok):
+    """Every edge that appeared during a reverse merge is a submitted update.
+
+    ``owners``/``cands``/``ok``: the flattened update batch given to
+    ``reverse_edge_merge``.  Checks that for every row j, each id present in
+    ``adj_after[j]`` but not ``adj_before[j]`` equals ``cands[u]`` for some
+    submitted update u with ``owners[u] == j`` and ``ok[u]``.
+    """
+    before = np.asarray(adj_before)
+    after = np.asarray(adj_after)
+    owners = np.asarray(owners)
+    cands = np.asarray(cands)
+    ok = np.asarray(ok)
+    submitted = {}
+    for j, i, o in zip(owners, cands, ok):
+        if o:
+            submitted.setdefault(int(j), set()).add(int(i))
+    for j in range(after.shape[0]):
+        old = set(int(x) for x in before[j] if x >= 0)
+        new = set(int(x) for x in after[j] if x >= 0)
+        extra = new - old
+        assert extra <= submitted.get(j, set()), (
+            f"row {j} gained non-submitted edges {extra - submitted.get(j, set())}"
+        )

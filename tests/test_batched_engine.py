@@ -15,6 +15,7 @@ import pytest
 
 from repro.core import (
     ANNIndex,
+    build_swgraph_wave,
     get_distance,
     knn_scan,
     make_batched_searcher,
@@ -23,7 +24,7 @@ from repro.core import (
     select_entries,
     symmetrized,
 )
-from repro.core.batched_beam import _bitonic_merge
+from repro.core.batched_beam import _bitonic_merge, batched_beam_search
 from repro.data.synthetic import lda_like_histograms, split_queries
 
 N_DB, N_Q, DIM, K = 600, 16, 16, 10
@@ -130,6 +131,96 @@ def test_pallas_frontier_kernel_matches_jnp_path(data):
     d2, i2, e2, h2 = pl_eng(Q[:4])
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4, atol=1e-4)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# ---------------------------------------------------------------------------
+# lock-step engine edge cases (n_active extremes, tiny datasets, determinism)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_engine(n=40, dim=8, nn=4):
+    """Small built graph + a raw score_rows closure for direct engine calls."""
+    dist = get_distance("kl")
+    X = lda_like_histograms(jax.random.PRNGKey(9), n + 4, dim)
+    Q, db = X[:4], X[4:]
+    adj, _ = build_swgraph_wave(dist, db, NN=nn, ef_construction=16, wave=8)
+    consts = dist.prep_scan(db)
+    qc = jax.vmap(dist.prep_query)(Q)
+
+    def score_rows(ids):
+        rows = jax.tree.map(lambda a: a[ids], consts)
+        return jax.vmap(dist.score)(rows, qc)
+
+    return adj, score_rows, Q.shape[0]
+
+
+def test_engine_n_active_zero_returns_empty_beams():
+    """n_active=0: nothing is searchable — even the entries are masked; the
+    engine must return padded (-1, inf) beams with zero evals/hops."""
+    adj, score_rows, B = _tiny_engine()
+    st = batched_beam_search(adj, score_rows, jnp.zeros((1,), jnp.int32), B, 8,
+                             n_active=0)
+    assert np.all(np.asarray(st.beam_i) == -1)
+    assert np.all(np.isinf(np.asarray(st.beam_d)))
+    assert np.all(np.asarray(st.n_evals) == 0)
+    assert np.all(np.asarray(st.hops) == 0)
+
+
+def test_engine_n_active_one_sees_only_node_zero():
+    adj, score_rows, B = _tiny_engine()
+    st = batched_beam_search(adj, score_rows, jnp.zeros((1,), jnp.int32), B, 8,
+                             n_active=1)
+    ids = np.asarray(st.beam_i)
+    assert np.all(ids[:, 0] == 0)
+    assert np.all(ids[:, 1:] == -1)
+    assert np.all(np.asarray(st.n_evals) == 1)
+
+
+def test_engine_ef_smaller_than_frontier():
+    """frontier is clamped to ef: a fatter frontier than the beam is legal
+    and still returns a valid sorted beam."""
+    adj, score_rows, B = _tiny_engine()
+    st = batched_beam_search(adj, score_rows, jnp.zeros((1,), jnp.int32), B,
+                             ef=3, frontier=16)
+    d = np.asarray(st.beam_d)
+    ids = np.asarray(st.beam_i)
+    assert d.shape == (B, 3) and np.isfinite(d).all()
+    assert np.all(np.diff(d, axis=1) >= 0)
+    for row in ids:
+        assert len(set(row.tolist())) == len(row)
+
+
+def test_engine_dataset_smaller_than_ef():
+    """ef larger than the whole database: every node lands in the beam once,
+    the tail stays padded, and the search still terminates."""
+    n = 12
+    adj, score_rows, B = _tiny_engine(n=n)
+    st = batched_beam_search(adj, score_rows, jnp.zeros((1,), jnp.int32), B,
+                             ef=64, frontier=2)
+    ids = np.asarray(st.beam_i)
+    d = np.asarray(st.beam_d)
+    for b in range(B):
+        found = ids[b][ids[b] >= 0]
+        assert len(found) == n and set(found.tolist()) == set(range(n))
+    assert np.all(np.isinf(d[:, n:])) and np.all(ids[:, n:] == -1)
+
+
+def test_engine_jit_nojit_deterministic_at_frontier_gt1():
+    """The frontier>1 relaxation is still a deterministic function: jitted
+    and eager runs produce bit-identical beams, evals and hops."""
+    adj, score_rows, B = _tiny_engine()
+
+    def run():
+        return batched_beam_search(adj, score_rows,
+                                   jnp.asarray([0, 7], jnp.int32), B, 16,
+                                   frontier=4)
+    eager = run()
+    jitted = jax.jit(run)()
+    for a, b in zip(eager, jitted):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    again = run()
+    for a, b in zip(eager, again):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_select_entries_medoid_first_unique(data):

@@ -37,8 +37,17 @@ def _build_doc():
     }
 
 
+def _online_doc():
+    return {
+        "rebuild": {"pts_per_s": 900.0, "recall@10": 0.999},
+        "insert": {"pts_per_s": 1200.0},
+        "churn_query": {"qps": 2500.0, "recall@10": 0.996},
+        "after_compact": {"recall@10": 0.998, "compact_s": 1.2},
+    }
+
+
 def test_identical_runs_pass():
-    for doc in (_engine_doc(), _build_doc()):
+    for doc in (_engine_doc(), _build_doc(), _online_doc()):
         rows, failures, _ = compare(doc, copy.deepcopy(doc), qps_tol=0.15, recall_tol=0.005)
         assert rows and not failures
 
@@ -92,6 +101,30 @@ def test_calibration_absorbs_slower_runner_but_not_engine_regression():
     _, failures, _ = compare(_engine_doc(), fresh, qps_tol=0.15, recall_tol=0.005,
                              calibrate=True)
     assert [f["config"] for f in failures] == ["frontier=8, ef=96, compact=32"]
+
+
+def test_online_schema_gates_insert_throughput_and_recalls():
+    fresh = _online_doc()
+    fresh["insert"]["pts_per_s"] *= 0.8
+    _, failures, _ = compare(_online_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert [f["section"] for f in failures] == ["insert"]
+    fresh = _online_doc()
+    fresh["after_compact"]["recall@10"] -= 0.01  # tombstone-repair regression
+    _, failures, _ = compare(_online_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert [(f["section"], f["metric"]) for f in failures] == [
+        ("after_compact", "recall@10")
+    ]
+    # calibration: a uniformly slower runner rescales through the rebuild
+    # yardstick and passes
+    fresh = _online_doc()
+    for sec in fresh.values():
+        if "pts_per_s" in sec:
+            sec["pts_per_s"] *= 0.5
+        if "qps" in sec:
+            sec["qps"] *= 0.5
+    _, failures, cal = compare(_online_doc(), fresh, qps_tol=0.15,
+                               recall_tol=0.005, calibrate=True)
+    assert not failures and cal == pytest.approx(0.5)
 
 
 def test_only_matching_configs_compared():

@@ -23,10 +23,16 @@ from repro.core import (
     get_distance,
     knn_scan,
     recall_at_k,
+    reverse_edge_merge,
     symmetrized,
 )
 from repro.core.nndescent import _sampled_reverse
 from repro.data.synthetic import lda_like_histograms, split_queries
+
+from graph_invariants import (
+    check_adjacency_invariants,
+    check_merge_only_added_submitted_edges,
+)
 
 N_DB, N_Q, DIM, K = 420, 16, 16, 10
 
@@ -51,16 +57,6 @@ def test_wave1_bit_identical_to_sequential(name, index_sym, data):
     np.testing.assert_array_equal(np.asarray(deg_s), np.asarray(deg_w))
 
 
-def _check_invariants(adj, n, M_max):
-    a = np.asarray(adj)
-    assert a.shape[1] == M_max
-    assert a.min() >= -1 and a.max() < n
-    assert not (a == np.arange(n)[:, None]).any(), "self loop"
-    for i, row in enumerate(a):
-        r = row[row >= 0]
-        assert len(set(r.tolist())) == len(r), f"duplicate ids in row {i}: {r}"
-
-
 @settings(max_examples=6, deadline=None)
 @given(
     wave=st.integers(min_value=2, max_value=48),
@@ -73,7 +69,7 @@ def test_wave_build_invariants_hold(wave, name, data):
     db = db[:180]
     dist = get_distance(name)
     adj, deg = build_swgraph_wave(dist, db, NN=6, ef_construction=24, wave=wave)
-    _check_invariants(adj, db.shape[0], 12)
+    check_adjacency_invariants(adj, db.shape[0], 12)
     assert int(jnp.max(deg)) <= 12
     # every non-seed point got forward edges (the graph stays navigable)
     assert int(jnp.min(deg[1:])) >= 1
@@ -125,6 +121,79 @@ def test_sampled_reverse_single_scatter_edges_are_real():
                 assert j in fwd[i], (j, i)
 
 
+# ---------------------------------------------------------------------------
+# reverse-edge eviction merge invariants (shared by build AND online insert)
+# ---------------------------------------------------------------------------
+
+
+def _random_merge_state(seed, n, M_max, U):
+    """Random partial adjacency (no dups/self-loops) + a random update batch."""
+    rng = np.random.RandomState(seed)
+    adj = np.full((n, M_max), -1, np.int32)
+    adj_d = np.full((n, M_max), np.inf, np.float32)
+    for j in range(n):
+        deg = rng.randint(0, M_max + 1)
+        others = np.setdiff1d(np.arange(n), [j])
+        picks = rng.choice(others, size=min(deg, len(others)), replace=False)
+        adj[j, : len(picks)] = picks
+        adj_d[j, : len(picks)] = rng.rand(len(picks)).astype(np.float32) * 10
+    owners = rng.randint(0, n, U).astype(np.int32)
+    cands = rng.randint(0, n, U).astype(np.int32)  # may collide with owners
+    d_rev = (rng.rand(U) * 10).astype(np.float32)
+    ok = rng.rand(U) < 0.8
+    return adj, adj_d, owners, cands, d_rev, ok
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**30),
+    n=st.integers(min_value=4, max_value=48),
+    M_max=st.integers(min_value=2, max_value=8),
+    rounds=st.integers(min_value=1, max_value=6),
+)
+def test_reverse_edge_merge_invariants(seed, n, M_max, rounds):
+    """Degree cap never exceeded, no self-loops, no duplicate neighbors —
+    even under adversarial updates (self-candidates, duplicate (owner, cand)
+    pairs, masked slots).  The same checkers guard the online insert path
+    (tests/test_online_index.py)."""
+    U = 3 * n
+    adj, adj_d, owners, cands, d_rev, ok = _random_merge_state(seed, n, M_max, U)
+    out_adj, out_d = reverse_edge_merge(
+        jnp.asarray(adj), jnp.asarray(adj_d), jnp.asarray(owners),
+        jnp.asarray(cands), jnp.asarray(d_rev), jnp.asarray(ok), rounds
+    )
+    check_adjacency_invariants(out_adj, n, M_max, adj_d=out_d)
+    check_merge_only_added_submitted_edges(adj, out_adj, owners, cands, ok)
+
+
+def test_reverse_edge_merge_keeps_closest_and_respects_rounds():
+    """A full row keeps the M_max closest of {existing} u {applied updates};
+    an owner receiving more than ``rounds`` candidates keeps the closest
+    ``rounds`` of them (the documented NMSLIB-style relaxation)."""
+    M_max = 3
+    adj = jnp.asarray([[1, 2, 3], [-1, -1, -1], [-1, -1, -1], [-1, -1, -1]], jnp.int32)
+    adj_d = jnp.asarray(
+        [[1.0, 5.0, 9.0], [np.inf] * 3, [np.inf] * 3, [np.inf] * 3], jnp.float32
+    )
+    owners = jnp.asarray([0, 0, 1, 1, 1, 1], jnp.int32)
+    cands = jnp.asarray([2, 3, 0, 2, 3, 1], jnp.int32)  # 2/3 dup targets; 1 self
+    d_rev = jnp.asarray([0.5, 2.0, 4.0, 1.0, 3.0, 0.1], jnp.float32)
+    ok = jnp.ones((6,), bool)
+    out_adj, out_d = reverse_edge_merge(adj, adj_d, owners, cands, d_rev, ok, 2)
+    a = np.asarray(out_adj)
+    # owner 0: candidates 2 and 3 are already present -> skipped; unchanged
+    assert set(a[0].tolist()) == {1, 2, 3}
+    # owner 1, rounds=2: the self-candidate (d=.1) is rank 0 and is guarded
+    # out (its round is still consumed); rank 1 applies the closest real
+    # candidate 2 (d=1); candidates 3 and 0 exceed the round budget
+    assert set(x for x in a[1].tolist() if x >= 0) == {2}
+    out_adj3, out_d3 = reverse_edge_merge(adj, adj_d, owners, cands, d_rev, ok, 3)
+    # one more round admits candidate 3 (d=3) as well
+    assert set(x for x in np.asarray(out_adj3)[1].tolist() if x >= 0) == {2, 3}
+    check_adjacency_invariants(out_adj, 4, M_max, adj_d=out_d)
+    check_adjacency_invariants(out_adj3, 4, M_max, adj_d=out_d3)
+
+
 def test_build_sharded_single_shard_smoke(data):
     """1-shard mesh: stitched graph == local graph in global ids, searchable."""
     Q, db = data
@@ -136,7 +205,7 @@ def test_build_sharded_single_shard_smoke(data):
     assert nbrs.shape == (256, 2 * 8 + 3)
     # single shard -> every cross-link candidate is own-shard, hence masked
     assert int(jnp.max(nbrs[:, -3:])) == -1
-    _check_invariants(nbrs[:, :-3], 256, 16)
+    check_adjacency_invariants(nbrs[:, :-3], 256, 16)
     _, true_ids = knn_scan(dist, Q, db, K)
     idx_like = ANNIndex(X=db, neighbors=nbrs, dist=dist, search_dist=dist,
                         query_sym="none")

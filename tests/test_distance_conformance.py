@@ -1,0 +1,155 @@
+"""Non-metric distance conformance suite.
+
+Every registered distance (plus several extra Renyi alphas) must expose ONE
+consistent contract across all five evaluation paths the system uses:
+
+    pairwise          scalar oracle (the ground truth)
+    matrix            full (L, R) block
+    query_matrix      left AND right query conventions
+    pairwise_batch    elementwise batches
+    prep_scan + score the gather contract driven by the beam engines
+
+and the asymmetry structure must be preserved: genuinely non-symmetric
+distances (KL, Itakura-Saito, Renyi alpha != 0.5) may never be silently
+symmetrized by any of the batched forms.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.distances import available_distances, get_distance
+from repro.data.synthetic import random_histograms
+
+# every registry entry + extra Renyi alphas (the registry itself carries
+# 0.25/0.75/2; 0.5 is the symmetric special case, 4 is strongly asymmetric)
+CONFORMANCE_DISTS = sorted(set(available_distances()) | {"renyi_0.5", "renyi_4"})
+ASYMMETRIC = ["kl", "itakura_saito", "renyi_0.25", "renyi_0.75", "renyi_2", "renyi_4"]
+# d(u, u) ~ 0 holds for the divergences and L2, NOT for the negated inner
+# product (self-similarity is -||u||^2 by design)
+ZERO_SELF = [n for n in CONFORMANCE_DISTS if n not in ("negdot", "bm25")]
+
+RTOL, ATOL = 5e-4, 5e-5
+
+
+def _data(seed, n, d):
+    # strictly positive simplex rows are valid input for every registered
+    # distance (the non-simplex ones accept arbitrary vectors)
+    return random_histograms(jax.random.PRNGKey(seed), n, d)
+
+
+def _oracle(dist, U, V):
+    return np.asarray(jax.vmap(lambda u: jax.vmap(lambda v: dist.pairwise(u, v))(V))(U))
+
+
+@pytest.mark.parametrize("name", CONFORMANCE_DISTS)
+def test_all_batched_forms_agree_with_scalar_pairwise(name):
+    dist = get_distance(name)
+    U = _data(0, 6, 12)
+    V = _data(1, 5, 12)
+    want = _oracle(dist, U, V)  # want[i, j] = d(U[i], V[j])
+
+    np.testing.assert_allclose(dist.matrix(U, V), want, rtol=RTOL, atol=ATOL)
+    # left queries: D[b, i] = d(X[i], Q[b]) with X=U the database, Q=V
+    np.testing.assert_allclose(
+        dist.query_matrix(V, U, mode="left"), want.T, rtol=RTOL, atol=ATOL
+    )
+    # right queries: D[b, i] = d(Q[b], X[i]) with Q=U, X=V
+    np.testing.assert_allclose(
+        dist.query_matrix(U, V, mode="right"), want, rtol=RTOL, atol=ATOL
+    )
+    W = _data(2, 6, 12)
+    np.testing.assert_allclose(
+        dist.pairwise_batch(U, W), np.diagonal(_oracle(dist, U, W)),
+        rtol=RTOL, atol=ATOL,
+    )
+
+
+@pytest.mark.parametrize("name", CONFORMANCE_DISTS)
+def test_prep_scan_score_contract_matches_pairwise(name):
+    """The gather contract the beam engines drive: score(consts[rows], qc)
+    must equal d(X[rows], q) for any row subset, including repeated rows."""
+    dist = get_distance(name)
+    X = _data(3, 9, 10)
+    Q = _data(4, 3, 10)
+    consts = dist.prep_scan(X)
+    rows_idx = jnp.asarray([0, 3, 3, 8, 5], jnp.int32)  # dups are legal
+    want = _oracle(dist, X[rows_idx], Q)
+    for b in range(3):
+        qc = dist.prep_query(Q[b])
+        rows = jax.tree.map(lambda a: a[rows_idx], consts)
+        got = np.asarray(dist.score(rows, qc))
+        np.testing.assert_allclose(got, want[:, b], rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("name", ZERO_SELF)
+def test_self_distance_is_zero(name):
+    dist = get_distance(name)
+    U = _data(5, 12, 16)
+    np.testing.assert_allclose(dist.pairwise_batch(U, U), 0.0, atol=2e-4)
+    np.testing.assert_allclose(np.diagonal(dist.matrix(U, U)), 0.0, atol=2e-4)
+
+
+@pytest.mark.parametrize("name", ASYMMETRIC)
+def test_asymmetry_not_silently_symmetrized(name):
+    """d(u, v) != d(v, u) on random pairs — in the scalar oracle AND in every
+    batched form (a batched path that symmetrized would pass the agreement
+    tests only if the oracle symmetrized too, so pin both directions)."""
+    dist = get_distance(name)
+    U = _data(6, 32, 24)
+    V = _data(7, 32, 24)
+    fwd = np.asarray(dist.pairwise_batch(U, V))
+    rev = np.asarray(dist.pairwise_batch(V, U))
+    assert np.max(np.abs(fwd - rev)) > 1e-3, f"{name} looks symmetrized"
+    M = np.asarray(dist.matrix(U, V))
+    Mt = np.asarray(dist.matrix(V, U)).T
+    assert np.max(np.abs(M - Mt)) > 1e-3
+    L = np.asarray(dist.query_matrix(V, U, mode="left"))
+    R = np.asarray(dist.query_matrix(V, U, mode="right"))
+    # left gives d(U[i], V[b]); right gives d(V[b], U[i]) — must differ
+    assert np.max(np.abs(L - R)) > 1e-3
+    assert not dist.symmetric
+
+
+@pytest.mark.parametrize("name", ["renyi_0.5", "l2"])
+def test_symmetric_cases_are_symmetric(name):
+    dist = get_distance(name)
+    U = _data(8, 16, 12)
+    V = _data(9, 16, 12)
+    np.testing.assert_allclose(
+        dist.pairwise_batch(U, V), dist.pairwise_batch(V, U), rtol=1e-4, atol=1e-5
+    )
+    assert dist.symmetric
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=2, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**30),
+    name=st.sampled_from(CONFORMANCE_DISTS),
+)
+def test_property_all_paths_agree_random_shapes(d, seed, name):
+    """Property: for random dims/data, matrix, both query_matrix modes,
+    pairwise_batch and the scan/score contract all reproduce the oracle."""
+    dist = get_distance(name)
+    U = random_histograms(jax.random.PRNGKey(seed), 3, d)
+    V = random_histograms(jax.random.PRNGKey(seed + 1), 3, d)
+    want = _oracle(dist, U, V)
+    np.testing.assert_allclose(dist.matrix(U, V), want, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(
+        dist.query_matrix(V, U, mode="left"), want.T, rtol=RTOL, atol=ATOL
+    )
+    np.testing.assert_allclose(
+        dist.query_matrix(U, V, mode="right"), want, rtol=RTOL, atol=ATOL
+    )
+    np.testing.assert_allclose(
+        dist.pairwise_batch(U, V), np.diagonal(want), rtol=RTOL, atol=ATOL
+    )
+    consts = dist.prep_scan(U)
+    qc = dist.prep_query(V[0])
+    np.testing.assert_allclose(
+        dist.score(consts, qc), want[:, 0], rtol=RTOL, atol=ATOL
+    )

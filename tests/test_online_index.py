@@ -1,0 +1,214 @@
+"""Online mutable index: churn parity, tombstone semantics, capacity edges.
+
+Acceptance contract (ISSUE 3): after inserting 25% new points and deleting
+20% of the originals, the online index's recall@10 on the KL workload is
+within 0.01 of a fresh wave rebuild of the same surviving set; insert at
+capacity and delete-all-then-query return well-defined results (no OOB
+gathers, padded -1/inf rows).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ANNIndex,
+    OnlineIndex,
+    build_swgraph_wave,
+    get_distance,
+    knn_scan,
+    recall_at_k,
+)
+from repro.core.batched_beam import make_step_searcher
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+from graph_invariants import check_adjacency_invariants
+
+N_DB, N_NEW, N_Q, DIM, K = 420, 105, 16, 16, 10
+NN, EF_C, EF_S = 10, 60, 96
+BUILD = dict(builder="swgraph", build_engine="wave", wave=32, NN=NN,
+             ef_construction=EF_C)
+
+
+@pytest.fixture(scope="module")
+def data():
+    X = lda_like_histograms(jax.random.PRNGKey(0), N_DB + N_NEW + N_Q, DIM)
+    Q, rest = split_queries(X, N_Q, jax.random.PRNGKey(1))
+    return Q, rest[:N_DB], rest[N_DB:]
+
+
+@pytest.fixture(scope="module")
+def churned(data):
+    """One shared churn episode: +25% inserts, -20% original deletes."""
+    Q, db, X_new = data
+    dist = get_distance("kl")
+    idx = ANNIndex.build(db, dist, capacity=2 * N_DB,
+                         key=jax.random.PRNGKey(2), **BUILD)
+    new_ids = idx.insert(X_new)
+    dead = np.random.RandomState(7).choice(N_DB, size=N_DB // 5, replace=False)
+    assert idx.delete(dead) == len(dead)
+    surv = np.concatenate([np.setdiff1d(np.arange(N_DB), dead), new_ids])
+    return idx, dist, dead, surv
+
+
+def _recall(ids, true_global):
+    return recall_at_k(np.asarray(ids), np.asarray(true_global))
+
+
+def test_churn_parity_with_fresh_rebuild(churned, data):
+    """The acceptance criterion: online churn recall within 0.01 of a fresh
+    ``build_swgraph_wave`` rebuild over the identical surviving set."""
+    Q, db, X_new = data
+    idx, dist, dead, surv = churned
+    o = idx.online
+    X_surv = o.X[jnp.asarray(surv)]
+    _, true_pos = knn_scan(dist, Q, X_surv, K)  # positions into X_surv
+    true_global = surv[np.asarray(true_pos)]
+
+    _, ids, _, _ = idx.search(Q, k=K, ef_search=EF_S)
+    r_online = _recall(ids, true_global)
+
+    adj_f, _ = build_swgraph_wave(dist, X_surv, NN=NN, ef_construction=EF_C,
+                                  wave=32)
+    fresh = make_step_searcher(dist, adj_f, X_surv, EF_S, K,
+                               entries=jnp.zeros((1,), jnp.int32), frontier=2)
+    _, ids_f, _, _ = fresh(Q)
+    r_fresh = recall_at_k(np.asarray(ids_f), np.asarray(true_pos))
+    assert r_online >= r_fresh - 0.01, (r_online, r_fresh)
+
+    # compaction repairs tombstone damage; parity must hold there too
+    stats = idx.compact()
+    assert stats["tombstones"] == len(dead)
+    _, ids_c, _, _ = idx.search(Q, k=K, ef_search=EF_S)
+    assert _recall(ids_c, true_global) >= r_fresh - 0.01
+
+
+def test_deleted_ids_never_returned(churned, data):
+    Q, _, _ = data
+    idx, _, dead, _ = churned
+    _, ids, _, _ = idx.search(Q, k=K, ef_search=EF_S)
+    assert not np.isin(np.asarray(ids), dead).any()
+
+
+def test_inserted_points_are_retrievable(churned, data):
+    """Searching for an inserted vector finds its own id (self-distance ~0)."""
+    Q, _, X_new = data
+    idx, _, _, surv = churned
+    o = idx.online
+    probe_ids = surv[-8:]  # all inserted, all alive
+    d, ids, _, _ = idx.search(o.X[jnp.asarray(probe_ids)], k=1, ef_search=EF_S)
+    np.testing.assert_array_equal(np.asarray(ids)[:, 0], probe_ids)
+    np.testing.assert_allclose(np.asarray(d)[:, 0], 0.0, atol=1e-4)
+
+
+def test_structural_invariants_through_churn(churned):
+    idx, _, dead, _ = churned
+    o = idx.online
+    check_adjacency_invariants(o.adj[: o.n_total], o.n_total, o.M_max,
+                               adj_d=o.adj_d[: o.n_total])
+    # compact() (run by the parity test) dropped every edge into a tombstone
+    check_adjacency_invariants(o.adj[: o.n_total], o.n_total, o.M_max,
+                               forbidden=dead, adj_d=o.adj_d[: o.n_total])
+    # capacity suffix was never touched
+    assert int(jnp.max(o.adj[o.n_total:])) == -1
+    assert not bool(jnp.any(o.alive[o.n_total:]))
+
+
+def test_insert_to_capacity_then_overflow_raises(data):
+    _, db, X_new = data
+    dist = get_distance("kl")
+    small = db[:120]
+    idx = ANNIndex.build(small, dist, capacity=130, key=jax.random.PRNGKey(3),
+                         **BUILD)
+    ids = idx.insert(X_new[:10])  # exactly fills the capacity
+    assert idx.online.free_slots == 0
+    with pytest.raises(ValueError, match="capacity"):
+        idx.insert(X_new[10:11])
+    # the full index still serves well-defined results
+    d, got, _, _ = idx.search(idx.online.X[jnp.asarray(ids)], k=1, ef_search=48)
+    np.testing.assert_array_equal(np.asarray(got)[:, 0], ids)
+
+
+def test_delete_all_then_query_returns_padded(data):
+    Q, db, X_new = data
+    dist = get_distance("kl")
+    idx = ANNIndex.build(db[:100], dist, capacity=200,
+                         key=jax.random.PRNGKey(4), **BUILD)
+    assert idx.delete(np.arange(100)) == 100
+    d, ids, n_evals, _ = idx.search(Q, k=K, ef_search=48)
+    assert np.all(np.asarray(ids) == -1)
+    assert np.all(np.isinf(np.asarray(d)))
+    assert np.all(np.asarray(n_evals) == 0)
+    # the wiped index accepts fresh inserts and serves them again
+    back = idx.insert(X_new[:40])
+    _, ids2, _, _ = idx.search(idx.online.X[jnp.asarray(back[:4])], k=1,
+                               ef_search=48)
+    np.testing.assert_array_equal(np.asarray(ids2)[:, 0], back[:4])
+
+
+def test_multiwave_insert_after_wipe_stays_connected(data):
+    """Regression: during a multi-wave insert into a fully tombstoned index,
+    the entry refresh must see the earlier waves' points (high-water mark
+    advances per wave) — otherwise every wave becomes a disconnected island."""
+    _, db, X_new = data
+    dist = get_distance("kl")
+    idx = ANNIndex.build(db[:100], dist, capacity=300,
+                         key=jax.random.PRNGKey(8), **{**BUILD, "wave": 16})
+    idx.delete(np.arange(100))
+    back = idx.insert(X_new[:80])  # 5 waves of 16
+    o = idx.online
+    adj = np.asarray(o.adj)
+    wave1 = set(back[:16].tolist())
+    cross = sum(
+        1 for u in back for t in adj[u]
+        if t >= 0 and ((u in wave1) != (int(t) in wave1))
+    )
+    assert cross > 0, "insert waves formed disconnected islands"
+    _, ids, _, _ = idx.search(o.X[jnp.asarray(back)], k=1, ef_search=48)
+    np.testing.assert_array_equal(np.asarray(ids)[:, 0], back)
+
+
+def test_lazy_online_conversion_and_engine_guard(data):
+    """Mutation on a capacity-less index converts lazily (2n default);
+    the frozen reference engine refuses to serve the mutable graph."""
+    _, db, X_new = data
+    dist = get_distance("kl")
+    idx = ANNIndex.build(db[:150], dist, builder="nndescent", NN=8, nnd_iters=4,
+                         key=jax.random.PRNGKey(5))
+    assert idx.online is None
+    idx.insert(X_new[:10])
+    assert idx.online is not None and idx.online.capacity == 300
+    assert idx.X.shape[0] == 160  # mirrored high-water state
+    with pytest.raises(ValueError, match="online"):
+        idx.searcher(K, 48, engine="reference")
+
+
+def test_online_full_symmetrization_rerank_path(data):
+    """query_sym != none over a mutable index: beam under the symmetrized
+    distance, rerank under the original, deletes respected."""
+    Q, db, _ = data
+    dist = get_distance("kl")
+    idx = ANNIndex.build(db[:200], dist, index_sym="min", query_sym="min",
+                         capacity=400, key=jax.random.PRNGKey(6), **BUILD)
+    dead = np.arange(0, 200, 5)
+    idx.delete(dead)
+    d, ids, _, _ = idx.search(Q, k=K, ef_search=64, k_c=40)
+    ids_np = np.asarray(ids)
+    assert not np.isin(ids_np, dead).any()
+    # reported distances are the ORIGINAL distance of the returned ids
+    safe = np.where(ids_np >= 0, ids_np, 0)
+    want = np.asarray(dist.query_matrix(Q, idx.online.X[jnp.asarray(safe[0])],
+                                        mode="left"))
+    np.testing.assert_allclose(np.asarray(d)[0], want[0], rtol=1e-4, atol=1e-5)
+
+
+def test_from_graph_capacity_validation(data):
+    _, db, _ = data
+    dist = get_distance("kl")
+    adj, _ = build_swgraph_wave(dist, db[:64], NN=6, ef_construction=24, wave=16)
+    with pytest.raises(ValueError, match="capacity"):
+        OnlineIndex.from_graph(db[:64], adj, dist, capacity=32)
+    o = OnlineIndex.from_graph(db[:64], adj, dist, capacity=64)  # frozen-full
+    with pytest.raises(ValueError, match="capacity"):
+        o.insert(db[64:65])
