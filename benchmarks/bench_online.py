@@ -5,7 +5,8 @@ points while tombstoning 20% of the originals (R rounds of interleaved
 mutations), measure
 
   * online insert throughput (points/sec, steady-state: min over the
-    post-compile rounds),
+    post-compile rounds — rounds 2+ exercise free-list slot REUSE, since
+    every round's deletes feed the next round's inserts),
   * query throughput and recall@10 over the tombstoned graph (pre-compact),
   * compact() cost and post-compact recall,
   * a fresh ``build_swgraph_wave`` rebuild of the identical surviving set —
@@ -54,17 +55,24 @@ def run_online(out_path: str = "BENCH_online.json", quick: bool = False):
     )
     online = idx.online
     rng = np.random.default_rng(0)
-    del_ids = rng.choice(n0, size=del_total, replace=False)
 
-    # -- churn rounds: interleaved inserts + tombstones
-    ins_times = []
+    # -- churn rounds: interleaved inserts + tombstones.  Victims are drawn
+    # per round from ORIGINAL points that are still alive and were never
+    # tombstoned (killed_epoch == 0): inserts recycle tombstoned slots, so
+    # a fixed upfront victim list would collaterally delete the new points
+    # occupying recycled ids (arena semantics).
+    ins_times, n_deleted = [], 0
     for r in range(ROUNDS):
         chunk = pool[r * per_round:(r + 1) * per_round]
         t0 = time.time()
         jax.block_until_ready(idx.insert(chunk))
         ins_times.append(time.time() - t0)
-        idx.delete(del_ids[r * del_total // ROUNDS:(r + 1) * del_total // ROUNDS])
-    idx.delete(del_ids)  # flush any remainder of the 20% (idempotent)
+        want = (r + 1) * del_total // ROUNDS - n_deleted
+        originals = np.flatnonzero(
+            np.asarray(online.alive[:n0]) & (online.killed_epoch[:n0] == 0)
+        )
+        victims = rng.choice(originals, size=want, replace=False)
+        n_deleted += idx.delete(victims)
     insert = {
         "pts_per_s": round(per_round / min(ins_times[1:]), 1),
         "first_round_s": round(ins_times[0], 3),  # includes jit compiles

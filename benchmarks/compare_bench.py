@@ -59,6 +59,20 @@ SCHEMAS = {
             "after_compact": ((), "qps"),
         },
     },
+    # continuous-batching serving bench: only machine-independent RATIOS are
+    # throughput-gated (p99 speedup of the slot scheduler over static
+    # batching, adaptive-frontier eval reduction) — absolute latencies vary
+    # by runner class, ratios and recalls must not.  calibration=None: the
+    # gated metrics need no machine-speed rescaling.
+    "serve": {
+        "calibration": None,
+        "sections": {
+            "static": ((), None),
+            "continuous": ((), None),
+            "adaptive": ((), "eval_reduction_pct"),
+            "slo": ((), "p99_speedup"),
+        },
+    },
 }
 
 RECALL = "recall@10"
@@ -82,6 +96,8 @@ def _entries(doc, section, id_keys):
 
 def calibration_factor(base: dict, fresh: dict, schema: dict):
     """Machine-speed factor from the reference path: median(fresh/base)."""
+    if schema["calibration"] is None:
+        return 1.0
     section, metric = schema["calibration"]
     id_keys = schema["sections"][section][0]
     b, f = _entries(base, section, id_keys), _entries(fresh, section, id_keys)
@@ -103,7 +119,8 @@ def compare(base: dict, fresh: dict, *, qps_tol: float, recall_tol: float,
     if detect_schema(fresh) != detect_schema(base):
         raise SystemExit("baseline and fresh files have different schemas")
     cal = calibration_factor(base, fresh, schema) if calibrate else 1.0
-    cal_section = schema["calibration"][0] if calibrate else None
+    cal_section = (schema["calibration"][0]
+                   if calibrate and schema["calibration"] else None)
 
     rows, failures = [], []
     for section, (id_keys, thr) in schema["sections"].items():
@@ -112,7 +129,7 @@ def compare(base: dict, fresh: dict, *, qps_tol: float, recall_tol: float,
             cfg = ", ".join(f"{k}={v}" for k, v in zip(id_keys, ident)) or "-"
             be, fe = b[ident], f[ident]
             checks = []
-            if thr in be and thr in fe and section != cal_section:
+            if thr is not None and thr in be and thr in fe and section != cal_section:
                 floor = be[thr] * cal * (1.0 - qps_tol)
                 checks.append((thr, be[thr] * cal, fe[thr], floor, fe[thr] >= floor))
             if RECALL in be and RECALL in fe:

@@ -18,7 +18,7 @@ def main():
                     help="reduced combos/sizes (CI mode)")
     ap.add_argument("--only", default=None,
                     choices=[None, "table3", "fig12", "kernels", "engine",
-                             "build", "online"])
+                             "build", "online", "serve"])
     ap.add_argument("--n-db", type=int, default=None)
     ap.add_argument("--n-q", type=int, default=None)
     args = ap.parse_args()
@@ -50,6 +50,12 @@ def main():
         from . import bench_online
 
         bench_online.run_online(quick=args.quick)
+
+    if args.only in (None, "serve"):
+        print("\n=== serve: continuous-batching scheduler vs static batching ===")
+        from . import bench_serve
+
+        bench_serve.run_serve(quick=args.quick)
 
     if args.only in (None, "table3"):
         print("\n=== Table 3: filter-and-refine symmetrization vs "

@@ -23,9 +23,12 @@ from .beam_search import beam_search_impl, make_batched_searcher
 from .batched_beam import (
     BatchBeamState,
     batched_beam_search,
+    beam_step,
     make_step_searcher,
+    seed_beams,
     select_entries,
 )
+from .scheduler import GraphView, SlotResult, SlotScheduler
 from .swgraph import build_swgraph
 from .build_engine import build_sharded, build_swgraph_wave, reverse_edge_merge
 from .nndescent import build_nndescent

@@ -81,43 +81,23 @@ def select_entries(dist, X, n_entries: int = 4, key=None, sample: int = 256):
 # ---------------------------------------------------------------------------
 
 
-def batched_beam_search(
-    neighbors,  # (n, M) int32 adjacency, -1 padding
+def seed_beams(
     score_rows,  # (B, R) int32 ids -> (B, R) f32 left-query distances
     entries,  # (E,) i32 shared entry nodes
     B: int,
     ef: int,
-    max_steps: int | None = None,
-    frontier: int = 1,
-    compact: int = 32,
+    n: int,
     n_active=None,  # optional () i32: only nodes < n_active are searchable
     alive=None,  # optional (n,) bool: tombstoned nodes are never scored
-):
-    """Run B queries to convergence in lock-step.  Returns BatchBeamState.
+) -> BatchBeamState:
+    """Score the shared entry nodes for B queries and seed their beams.
 
-    ``score_rows`` closes over the query batch and the database constants
-    (jnp einsum or the fused Pallas kernel); invalid slots in its output are
-    masked here, so it may score placeholder id 0 freely.
-
-    ``n_active`` (may be traced) pre-marks every node >= n_active as visited,
-    mirroring ``beam_search_impl``'s construction-time prefix masking: the
-    wave build engine searches the frozen prefix graph of already-inserted
-    points without ever scoring the not-yet-inserted suffix.
-
-    ``alive`` (may be traced) pre-marks every node with ``alive[v] == False``
-    as visited — the online mutable index's tombstone mask.  Dead nodes are
-    never scored, never enter any beam, and never appear in results; entry
-    nodes failing either mask are seeded at +inf with id -1, so a fully
-    tombstoned (or ``n_active=0``) database yields empty (-1 / inf) beams
-    rather than out-of-bounds gathers.
+    The returned state is exactly the pre-loop state of
+    ``batched_beam_search``; the slot scheduler reuses it to (re)seed
+    individual slots as requests are admitted, so an admitted query starts
+    from the same floats as a batch-at-once query.
     """
-    n, M = neighbors.shape
     E = entries.shape[0]
-    if frontier < 1:
-        raise ValueError(f"frontier must be >= 1, got {frontier}")
-    T = min(frontier, ef)
-    if max_steps is None:
-        max_steps = n
     masked = n_active is not None or alive is not None
 
     # ---- seed: score every entry for every query, keep the best ef
@@ -176,7 +156,7 @@ def batched_beam_search(
         n_evals0 = jnp.broadcast_to(jnp.sum(entry_ok, dtype=jnp.int32), (B,))
     else:
         n_evals0 = jnp.full((B,), E, jnp.int32)
-    state = BatchBeamState(
+    return BatchBeamState(
         beam_d,
         beam_i,
         expanded,
@@ -186,90 +166,165 @@ def batched_beam_search(
         jnp.zeros((B,), bool),
     )
 
+
+def beam_step(
+    st: BatchBeamState,
+    neighbors,  # (n, M) int32 adjacency, -1 padding
+    score_rows,  # (B, R) int32 ids -> (B, R) f32 left-query distances
+    ef: int,
+    T: int,
+    C: int,
+    max_steps: int,
+    t_active=None,  # optional (B,) i32: per-query frontier width this step
+) -> BatchBeamState:
+    """One lock-step of the batched beam engine (the while_loop body).
+
+    Exposed so the slot scheduler can drive the identical step from a
+    host-side loop (retiring and refilling slots between steps).  With
+    ``t_active=None`` this is byte-for-byte the engine's loop body; a
+    per-query ``t_active`` additionally caps how many of the top-T popped
+    candidates each query may expand this step (clamped to [the candidates
+    that exist], used by the adaptive-frontier policy).  Queries with
+    ``done=True`` are frozen: their beam, visited set and counters pass
+    through unchanged.
+    """
+    B = st.beam_d.shape[0]
     rows_b = jnp.arange(B)[:, None]
-    # Compaction width: per step only the C best-scoring candidates can enter
-    # the beam.  C >= M makes frontier=1 EXACT (a single expansion yields at
-    # most M candidates); for frontier > 1 it bounds the merge width, and
-    # dropped candidates stay unvisited so other paths can still reach them.
-    C = min(T * M, max(M, compact))
+    M = neighbors.shape[1]
+
+    # -- per-query convergence masking (NMSLIB efSearch semantics)
+    cand = jnp.where(st.expanded, INF, st.beam_d)  # (B, ef)
+    best = jnp.min(cand, axis=1)
+    worst = st.beam_d[:, -1]
+    done = st.done | ~((best <= worst) & jnp.isfinite(best)) | (st.hops >= max_steps)
+    active = ~done
+
+    # -- pop the top-T unexpanded candidates of each active query,
+    # gated to the termination radius (a candidate farther than the
+    # current worst beam member would never be expanded sequentially)
+    neg_d, slots = jax.lax.top_k(-cand, T)  # (B, T), best-first
+    ok = jnp.isfinite(neg_d) & (-neg_d <= worst[:, None]) & active[:, None]  # (B, T)
+    if t_active is not None:
+        ok &= jnp.arange(T)[None, :] < jnp.minimum(t_active, T)[:, None]
+    nodes = jnp.take_along_axis(st.beam_i, slots, axis=1)
+    expanded = st.expanded.at[rows_b, slots].max(ok)
+
+    # -- gather + score the (B, T*M) neighbor frontier in one fused call
+    safe_nodes = jnp.where(ok, nodes, 0)
+    nbrs = neighbors[safe_nodes].reshape(B, T * M)
+    ok_r = jnp.repeat(ok, M, axis=1)  # (B, T*M), block-aligned
+    safe = jnp.where(nbrs >= 0, nbrs, 0)
+    words = jnp.take_along_axis(st.visited, safe // 32, axis=1)
+    unvisited = ((words >> (safe % 32).astype(jnp.uint32)) & 1) == 0
+    valid = (nbrs >= 0) & unvisited & ok_r
+    d = jnp.where(valid, score_rows(safe).astype(jnp.float32), INF)
+
+    # -- compact to the C best candidates (top_k breaks distance ties by
+    # position, i.e. exactly like a stable sort of the frontier)
+    neg_kept, kidx = jax.lax.top_k(-d, C)
+    kept_d = -neg_kept
+    kept_i = jnp.take_along_axis(nbrs, kidx, axis=1)
+    kept_ok = jnp.take_along_axis(valid, kidx, axis=1)
+    # two expanded nodes may share a neighbor (and adjacency rows may
+    # repeat ids): find later duplicates on the compacted block (O(C^2))
+    later = jnp.arange(C)[:, None] > jnp.arange(C)[None, :]  # [j, s]
+    dup = jnp.any(
+        (kept_i[:, :, None] == kept_i[:, None, :]) & later[None] & kept_ok[:, None, :],
+        axis=2,
+    )
+    if T > 1:
+        # keep the first (best) occurrence in the beam, void the rest,
+        # then restore sortedness (top_k ties-by-index keeps the order
+        # of the surviving entries) — the merge needs an ascending block
+        kept_d = jnp.where(dup, INF, kept_d)
+        kept_ok = kept_ok & ~dup
+        neg_srt, ridx = jax.lax.top_k(-kept_d, C)
+        kept_d = -neg_srt
+        kept_i = jnp.take_along_axis(kept_i, ridx, axis=1)
+        kept_ok = jnp.take_along_axis(kept_ok, ridx, axis=1)
+        mark = kept_ok
+    else:
+        mark = kept_ok & ~dup
+    # mark kept candidates visited: per-row-unique (word, bit) updates,
+    # so a scatter-add of fresh bits then a word-wise OR is exact
+    safe_kept = jnp.where(mark, kept_i, 0)
+    bits = jnp.where(mark, jnp.uint32(1) << (safe_kept % 32).astype(jnp.uint32), 0)
+    step_mask = jnp.zeros_like(st.visited).at[rows_b, safe_kept // 32].add(bits)
+    visited = st.visited | step_mask
+
+    # -- bitonic merge of the sorted beam with the sorted candidates:
+    # lexicographic (distance, position) keys reproduce the stable
+    # argsort of [beam | candidates] that the reference engine computes.
+    beam_d, beam_i, beam_e = _bitonic_merge(
+        (st.beam_d, st.beam_i, expanded), (kept_d, kept_i, ~kept_ok), ef
+    )
+    return BatchBeamState(
+        beam_d,
+        beam_i,
+        beam_e,
+        visited,
+        st.n_evals + jnp.sum(valid, axis=1, dtype=jnp.int32),
+        st.hops + active.astype(jnp.int32),
+        done,
+    )
+
+
+def frontier_compact_width(T: int, M: int, compact: int) -> int:
+    """Per-step merge width: only the C best-scoring candidates can enter
+    the beam.  C >= M makes frontier=1 EXACT (a single expansion yields at
+    most M candidates); for frontier > 1 it bounds the merge width, and
+    dropped candidates stay unvisited so other paths can still reach them."""
+    return min(T * M, max(M, compact))
+
+
+def batched_beam_search(
+    neighbors,  # (n, M) int32 adjacency, -1 padding
+    score_rows,  # (B, R) int32 ids -> (B, R) f32 left-query distances
+    entries,  # (E,) i32 shared entry nodes
+    B: int,
+    ef: int,
+    max_steps: int | None = None,
+    frontier: int = 1,
+    compact: int = 32,
+    n_active=None,  # optional () i32: only nodes < n_active are searchable
+    alive=None,  # optional (n,) bool: tombstoned nodes are never scored
+):
+    """Run B queries to convergence in lock-step.  Returns BatchBeamState.
+
+    ``score_rows`` closes over the query batch and the database constants
+    (jnp einsum or the fused Pallas kernel); invalid slots in its output are
+    masked here, so it may score placeholder id 0 freely.
+
+    ``n_active`` (may be traced) pre-marks every node >= n_active as visited,
+    mirroring ``beam_search_impl``'s construction-time prefix masking: the
+    wave build engine searches the frozen prefix graph of already-inserted
+    points without ever scoring the not-yet-inserted suffix.
+
+    ``alive`` (may be traced) pre-marks every node with ``alive[v] == False``
+    as visited — the online mutable index's tombstone mask.  Dead nodes are
+    never scored, never enter any beam, and never appear in results; entry
+    nodes failing either mask are seeded at +inf with id -1, so a fully
+    tombstoned (or ``n_active=0``) database yields empty (-1 / inf) beams
+    rather than out-of-bounds gathers.
+
+    Seed and step are exposed separately (``seed_beams`` / ``beam_step``)
+    so ``repro.core.scheduler`` can run the identical state machine with
+    slot retire/refill between steps.
+    """
+    n, M = neighbors.shape
+    if frontier < 1:
+        raise ValueError(f"frontier must be >= 1, got {frontier}")
+    T = min(frontier, ef)
+    if max_steps is None:
+        max_steps = n
+    state = seed_beams(score_rows, entries, B, ef, n, n_active=n_active, alive=alive)
+    C = frontier_compact_width(T, M, compact)
 
     def cond(st: BatchBeamState):
         return jnp.any(~st.done)
 
     def body(st: BatchBeamState):
-        # -- per-query convergence masking (NMSLIB efSearch semantics)
-        cand = jnp.where(st.expanded, INF, st.beam_d)  # (B, ef)
-        best = jnp.min(cand, axis=1)
-        worst = st.beam_d[:, -1]
-        done = st.done | ~((best <= worst) & jnp.isfinite(best)) | (st.hops >= max_steps)
-        active = ~done
-
-        # -- pop the top-T unexpanded candidates of each active query,
-        # gated to the termination radius (a candidate farther than the
-        # current worst beam member would never be expanded sequentially)
-        neg_d, slots = jax.lax.top_k(-cand, T)  # (B, T), best-first
-        ok = jnp.isfinite(neg_d) & (-neg_d <= worst[:, None]) & active[:, None]  # (B, T)
-        nodes = jnp.take_along_axis(st.beam_i, slots, axis=1)
-        expanded = st.expanded.at[rows_b, slots].max(ok)
-
-        # -- gather + score the (B, T*M) neighbor frontier in one fused call
-        safe_nodes = jnp.where(ok, nodes, 0)
-        nbrs = neighbors[safe_nodes].reshape(B, T * M)
-        ok_r = jnp.repeat(ok, M, axis=1)  # (B, T*M), block-aligned
-        safe = jnp.where(nbrs >= 0, nbrs, 0)
-        words = jnp.take_along_axis(st.visited, safe // 32, axis=1)
-        unvisited = ((words >> (safe % 32).astype(jnp.uint32)) & 1) == 0
-        valid = (nbrs >= 0) & unvisited & ok_r
-        d = jnp.where(valid, score_rows(safe).astype(jnp.float32), INF)
-
-        # -- compact to the C best candidates (top_k breaks distance ties by
-        # position, i.e. exactly like a stable sort of the frontier)
-        neg_kept, kidx = jax.lax.top_k(-d, C)
-        kept_d = -neg_kept
-        kept_i = jnp.take_along_axis(nbrs, kidx, axis=1)
-        kept_ok = jnp.take_along_axis(valid, kidx, axis=1)
-        # two expanded nodes may share a neighbor (and adjacency rows may
-        # repeat ids): find later duplicates on the compacted block (O(C^2))
-        later = jnp.arange(C)[:, None] > jnp.arange(C)[None, :]  # [j, s]
-        dup = jnp.any(
-            (kept_i[:, :, None] == kept_i[:, None, :]) & later[None] & kept_ok[:, None, :],
-            axis=2,
-        )
-        if T > 1:
-            # keep the first (best) occurrence in the beam, void the rest,
-            # then restore sortedness (top_k ties-by-index keeps the order
-            # of the surviving entries) — the merge needs an ascending block
-            kept_d = jnp.where(dup, INF, kept_d)
-            kept_ok = kept_ok & ~dup
-            neg_srt, ridx = jax.lax.top_k(-kept_d, C)
-            kept_d = -neg_srt
-            kept_i = jnp.take_along_axis(kept_i, ridx, axis=1)
-            kept_ok = jnp.take_along_axis(kept_ok, ridx, axis=1)
-            mark = kept_ok
-        else:
-            mark = kept_ok & ~dup
-        # mark kept candidates visited: per-row-unique (word, bit) updates,
-        # so a scatter-add of fresh bits then a word-wise OR is exact
-        safe_kept = jnp.where(mark, kept_i, 0)
-        bits = jnp.where(mark, jnp.uint32(1) << (safe_kept % 32).astype(jnp.uint32), 0)
-        step_mask = jnp.zeros_like(st.visited).at[rows_b, safe_kept // 32].add(bits)
-        visited = st.visited | step_mask
-
-        # -- bitonic merge of the sorted beam with the sorted candidates:
-        # lexicographic (distance, position) keys reproduce the stable
-        # argsort of [beam | candidates] that the reference engine computes.
-        beam_d, beam_i, beam_e = _bitonic_merge(
-            (st.beam_d, st.beam_i, expanded), (kept_d, kept_i, ~kept_ok), ef
-        )
-        return BatchBeamState(
-            beam_d,
-            beam_i,
-            beam_e,
-            visited,
-            st.n_evals + jnp.sum(valid, axis=1, dtype=jnp.int32),
-            st.hops + active.astype(jnp.int32),
-            done,
-        )
+        return beam_step(st, neighbors, score_rows, ef, T, C, max_steps)
 
     return jax.lax.while_loop(cond, body, state)
 

@@ -100,6 +100,80 @@ def reverse_edge_merge(adj, adj_d, owners, cands, d_rev, ok, rounds: int):
     return jax.lax.fori_loop(0, rounds, rev_round, (adj, adj_d))
 
 
+def reverse_edge_scores(dist, consts, qc_all, flat_i, safe_j):
+    """Slot distances for reverse candidates: d_build(x_i, x_j) with i the
+    candidate (left) and j the owner (query side, gathered from the
+    once-prepped ``qc_all``) — the composition every wave writer shares."""
+
+    def rev_score(i, j):
+        rows_i = jax.tree.map(lambda a: a[i[None]], consts)
+        qc_j = jax.tree.map(lambda a: a[j], qc_all)
+        return dist.score(rows_i, qc_j)[0].astype(jnp.float32)
+
+    return jax.vmap(rev_score)(flat_i, safe_j)
+
+
+def wave_connect(dist, consts, qc_all, adj, adj_d, pids, ok_pt, beam_i, beam_d,
+                 *, NN, L, R):
+    """Connect one wave of points into the graph from their beam results.
+
+    The shared wave body of ``build_swgraph_wave`` and the online index's
+    ``_insert_wave`` (only their beam-search masking differs: frozen-prefix
+    ``n_active`` at build time, ``alive`` tombstone mask online):
+
+      1. intra-wave links — the beam's masking hides wave-mates from each
+         other, so score the wave against itself (one exact (W, W) block)
+         and let each point's closest L wave-mates compete with its beam
+         candidates for the NN forward slots;
+      2. forward edges — one dropped-padding scatter of the wave's rows;
+      3. reverse edges — the degree-capped ``reverse_edge_merge``.
+
+    ``beam_i``/``beam_d`` are the wave's (W, ef) beam results; rows with
+    ``ok_pt[w] == False`` are padding and write nothing.  Returns the
+    updated ``(adj, adj_d)``.
+    """
+    cap, M_max = adj.shape
+    W = pids.shape[0]
+    safe_p = jnp.where(ok_pt, pids, 0)
+    ids = beam_i[:, :NN]  # (W, NN)
+    ds = beam_d[:, :NN]
+
+    if L > 0:
+        qc = jax.tree.map(lambda a: a[safe_p], qc_all)
+        rows_w = jax.tree.map(lambda a: a[safe_p], consts)
+        D_intra = jax.vmap(lambda q: dist.score(rows_w, q))(qc).astype(jnp.float32)
+        iw = jnp.arange(W)
+        bad = (iw[None, :] == iw[:, None]) | ~ok_pt[None, :] | ~ok_pt[:, None]
+        D_intra = jnp.where(bad, INF, D_intra)
+        negi, posi = jax.lax.top_k(-D_intra, L)
+        intra_i = jnp.where(jnp.isfinite(negi), safe_p[posi], -1)
+        cand_i = jnp.concatenate([ids, intra_i], axis=1)
+        cand_d = jnp.concatenate([jnp.where(ids >= 0, ds, INF), -negi], axis=1)
+        negf, sel = jax.lax.top_k(-cand_d, NN)  # beam ids and wave-mates
+        ds = -negf  # ids are disjoint (settled graph vs wave), no dedup here
+        ids = jnp.take_along_axis(cand_i, sel, axis=1)
+    valid = (ids >= 0) & jnp.isfinite(ds) & ok_pt[:, None]
+
+    # -- forward edges: one dropped-padding scatter for the whole wave
+    row_i = jnp.full((W, M_max), -1, jnp.int32).at[:, :NN].set(jnp.where(valid, ids, -1))
+    row_d = jnp.full((W, M_max), INF, jnp.float32).at[:, :NN].set(
+        jnp.where(valid, ds, INF)
+    )
+    dst = jnp.where(ok_pt, pids, cap)  # out-of-bounds rows are dropped
+    adj = adj.at[dst].set(row_i, mode="drop")
+    adj_d = adj_d.at[dst].set(row_d, mode="drop")
+
+    # -- reverse edges: flatten the wave's (owner j, candidate i,
+    # d_build(x_i, x_j)) updates through the shared eviction merge
+    U = W * NN
+    flat_j = ids.reshape(U)
+    flat_ok = valid.reshape(U)
+    flat_i = jnp.repeat(safe_p, NN)
+    safe_j = jnp.where(flat_ok, flat_j, 0)
+    d_rev = jnp.where(flat_ok, reverse_edge_scores(dist, consts, qc_all, flat_i, safe_j), INF)
+    return reverse_edge_merge(adj, adj_d, flat_j, flat_i, d_rev, flat_ok, R)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -160,15 +234,6 @@ def build_swgraph_wave(
     adj = jnp.full((n, M_max), -1, jnp.int32)
     adj_d = jnp.full((n, M_max), INF, jnp.float32)
     entries = jnp.zeros((1,), jnp.int32)
-    U = W * NN
-
-    def rev_score(i, j):
-        # identical composition to the sequential builder's add_reverse:
-        # d_build(x_i, x_j) with i the candidate (left), j the owner (query
-        # side, gathered from the once-prepped qc_all)
-        rows_i = jax.tree.map(lambda a: a[i[None]], consts)
-        qc_j = jax.tree.map(lambda a: a[j], qc_all)
-        return dist.score(rows_i, qc_j)[0].astype(jnp.float32)
 
     kernel_path = isinstance(dist, Distance) and (
         use_pallas is True or (use_pallas is None and jax.default_backend() == "tpu")
@@ -197,46 +262,10 @@ def build_swgraph_wave(
                 return jax.vmap(dist.score)(rows, qc)
 
         st = batched_beam_search(adj, score_rows, entries, W, ef, n_active=base, frontier=T)
-        ids = st.beam_i[:, :NN]  # (W, NN)
-        ds = st.beam_d[:, :NN]
-
-        if L > 0:
-            # intra-wave links: the frozen prefix hides wave-mates from the
-            # beam, so score the wave against itself (one exact (W, W)
-            # block) and let each point's closest L wave-mates compete with
-            # the beam candidates for the NN forward slots.
-            rows_w = jax.tree.map(lambda a: a[safe_p], consts)
-            D_intra = jax.vmap(lambda q: dist.score(rows_w, q))(qc).astype(jnp.float32)
-            iw = jnp.arange(W)
-            bad = (iw[None, :] == iw[:, None]) | ~ok_pt[None, :] | ~ok_pt[:, None]
-            D_intra = jnp.where(bad, INF, D_intra)
-            negi, posi = jax.lax.top_k(-D_intra, L)
-            intra_i = jnp.where(jnp.isfinite(negi), safe_p[posi], -1)
-            cand_i = jnp.concatenate([ids, intra_i], axis=1)
-            cand_d = jnp.concatenate([jnp.where(ids >= 0, ds, INF), -negi], axis=1)
-            negf, sel = jax.lax.top_k(-cand_d, NN)  # beam ids and wave-mate
-            ds = -negf  # ids are disjoint (prefix vs wave), so no dedup here
-            ids = jnp.take_along_axis(cand_i, sel, axis=1)
-        valid = (ids >= 0) & jnp.isfinite(ds) & ok_pt[:, None]
-
-        # -- forward edges: one dropped-padding scatter for the whole wave
-        row_i = jnp.full((W, M_max), -1, jnp.int32).at[:, :NN].set(jnp.where(valid, ids, -1))
-        row_d = jnp.full((W, M_max), INF, jnp.float32).at[:, :NN].set(
-            jnp.where(valid, ds, INF)
+        adj, adj_d = wave_connect(
+            dist, consts, qc_all, adj, adj_d, pids, ok_pt, st.beam_i, st.beam_d,
+            NN=NN, L=L, R=R,
         )
-        dst = jnp.where(ok_pt, pids, n)  # out-of-bounds rows are dropped
-        adj = adj.at[dst].set(row_i, mode="drop")
-        adj_d = adj_d.at[dst].set(row_d, mode="drop")
-
-        # -- reverse edges: flatten the wave's (owner j, candidate i,
-        # d_build(x_i, x_j)) updates and apply them through the shared
-        # scatter-with-eviction merge
-        flat_j = ids.reshape(U)
-        flat_ok = valid.reshape(U)
-        flat_i = jnp.repeat(safe_p, NN)
-        safe_j = jnp.where(flat_ok, flat_j, 0)
-        d_rev = jnp.where(flat_ok, jax.vmap(rev_score)(flat_i, safe_j), INF)
-        adj, adj_d = reverse_edge_merge(adj, adj_d, flat_j, flat_i, d_rev, flat_ok, R)
         return (adj, adj_d), None
 
     (adj, adj_d), _ = jax.lax.scan(wave_step, (adj, adj_d), pids_all)

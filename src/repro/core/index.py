@@ -172,7 +172,9 @@ class ANNIndex:
         return self.online
 
     def insert(self, X_new):
-        """Insert points into the live graph; returns their slot ids."""
+        """Insert points into the live graph; returns their slot ids
+        (arena semantics: a deleted id's slot may be recycled — see
+        ``OnlineIndex.insert``)."""
         ids = self.ensure_online().insert(X_new)
         self._sync_from_online()
         return ids
@@ -262,3 +264,71 @@ class ANNIndex:
     def search(self, Q, k: int = 10, ef_search: int = 64, k_c: Optional[int] = None,
                engine: str = "batched", frontier: int = 2):
         return self.searcher(k, ef_search, k_c, engine=engine, frontier=frontier)(Q)
+
+    # -------------------------------------------------------------- serving
+
+    def scheduler(self, k: int, ef_search: int, *, slots: int = 32,
+                  frontier: int = 4, adaptive: bool = False, patience: int = 1,
+                  steps_per_sync: int = 1, compact: int = 32, use_pallas=None):
+        """Continuous-batching slot scheduler over this index.
+
+        Returns a ``repro.core.scheduler.SlotScheduler``: ``slots``
+        concurrent queries advance in lock-step, each retiring the moment
+        it converges and handing its slot to the next pending request —
+        the serving-side answer to straggler queries that the all-at-once
+        ``searcher`` batch must wait for.  ``adaptive=True`` additionally
+        gives every slot its own frontier width (sequential-order
+        expansion while its beam radius improves, fat drain steps once it
+        stalls for ``patience`` steps), recovering the paper's
+        distance-evaluation counts at batched throughput.
+
+        On a mutable index the scheduler reads the live graph every tick:
+        inserts/deletes/compaction interleave with in-flight queries, and
+        results are re-masked against the current ``alive`` set at retire
+        time.  Requires ``query_sym == "none"`` (the paper's direct
+        non-metric search); the symmetrized-beam rerank scenario still
+        serves through ``searcher()``.
+        """
+        from .scheduler import GraphView, SlotScheduler
+
+        if self.query_sym != "none":
+            raise ValueError(
+                "the slot scheduler serves query_sym='none'; the "
+                "symmetrized-beam rerank path goes through searcher()"
+            )
+        ef = max(ef_search, k)
+        dim = int(self.X.shape[1])
+        if self.online is not None:
+            online = self.online
+
+            def graph_fn():
+                return GraphView(online.adj, online._search_consts(),
+                                 online.alive, online.entries,
+                                 epoch=online.mutation_epoch,
+                                 killed_epoch=online.killed_epoch)
+        else:
+            entries = (self.entries if self.entries is not None
+                       else jnp.zeros((1,), jnp.int32))
+            view = GraphView(self.neighbors, self.dist.prep_scan(self.X),
+                             None, entries)
+
+            def graph_fn():
+                if self.online is not None:
+                    # the slot state is fixed-shape in the FROZEN graph
+                    # (visited width, masking) — it cannot adopt the
+                    # capacity-padded mutable arrays mid-life, and silently
+                    # serving the stale snapshot would surface deleted
+                    # points.  Recreate the scheduler after ensure_online().
+                    raise RuntimeError(
+                        "index became mutable after this scheduler was "
+                        "created; create a new scheduler (it will read the "
+                        "live graph)"
+                    )
+                return view
+
+        return SlotScheduler(
+            self.dist, graph_fn, dim=dim, slots=slots, ef=ef, k=k,
+            frontier=frontier, adaptive=adaptive, patience=patience,
+            steps_per_sync=steps_per_sync, compact=compact,
+            use_pallas=use_pallas,
+        )

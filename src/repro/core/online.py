@@ -21,7 +21,10 @@ with capacity-padded arrays and keeps it live:
                  never scored, never enter a beam, and never appear in
                  results.  Edges through tombstones are NOT followed — a
                  heavily tombstoned region degrades recall until
-                 ``compact()`` repairs it.  Slots are never reused.
+                 ``compact()`` repairs it.  The slot joins a free list and
+                 is recycled by later inserts (arena id semantics; the
+                 ``killed_epoch`` stamp lets in-flight readers detect
+                 recycling).
 
   compact()      drops every edge into (and out of) tombstoned nodes, then
                  re-links the tombstones' surviving neighbors with repair
@@ -45,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .batched_beam import batched_beam_search
-from .build_engine import reverse_edge_merge
+from .build_engine import reverse_edge_merge, reverse_edge_scores, wave_connect
 
 INF = jnp.inf
 
@@ -69,12 +72,14 @@ def _insert_wave(dist, adj, adj_d, consts, qc_all, alive, entries, pids, ok_pt,
                  NN, ef, T, L, R):
     """Connect one wave of freshly written points against the alive graph.
 
-    Mirrors ``build_engine.wave_step`` with ``alive`` masking in place of the
-    prefix ``n_active``: wave points are not yet alive, so they see exactly
-    the frozen pre-wave graph (NMSLIB's relaxed insert ordering).  Returns
-    (adj, adj_d, alive) with the wave's points marked alive.
+    Runs the construction beam with ``alive`` masking in place of the
+    prefix ``n_active`` (wave points are not yet alive, so they see exactly
+    the frozen pre-wave graph — NMSLIB's relaxed insert ordering), then
+    applies the shared ``build_engine.wave_connect`` body (intra-wave links
+    + forward scatter + reverse-edge merge).  Returns (adj, adj_d, alive)
+    with the wave's points marked alive.
     """
-    cap, M_max = adj.shape
+    cap, _ = adj.shape
     W = pids.shape[0]
     safe_p = jnp.where(ok_pt, pids, 0)
     qc = jax.tree.map(lambda a: a[safe_p], qc_all)
@@ -84,52 +89,25 @@ def _insert_wave(dist, adj, adj_d, consts, qc_all, alive, entries, pids, ok_pt,
         return jax.vmap(dist.score)(rows, qc)
 
     st = batched_beam_search(adj, score_rows, entries, W, ef, frontier=T, alive=alive)
-    ids = st.beam_i[:, :NN]  # (W, NN)
-    ds = st.beam_d[:, :NN]
-
-    if L > 0:
-        # intra-wave links: the alive mask hides wave-mates from the beam,
-        # so score the wave against itself (one exact (W, W) block) and let
-        # each point's closest L wave-mates compete for the forward slots.
-        rows_w = jax.tree.map(lambda a: a[safe_p], consts)
-        D_intra = jax.vmap(lambda q: dist.score(rows_w, q))(qc).astype(jnp.float32)
-        iw = jnp.arange(W)
-        bad = (iw[None, :] == iw[:, None]) | ~ok_pt[None, :] | ~ok_pt[:, None]
-        D_intra = jnp.where(bad, INF, D_intra)
-        negi, posi = jax.lax.top_k(-D_intra, L)
-        intra_i = jnp.where(jnp.isfinite(negi), safe_p[posi], -1)
-        cand_i = jnp.concatenate([ids, intra_i], axis=1)
-        cand_d = jnp.concatenate([jnp.where(ids >= 0, ds, INF), -negi], axis=1)
-        negf, sel = jax.lax.top_k(-cand_d, NN)  # beam ids and wave-mate
-        ds = -negf  # ids are disjoint (live graph vs wave), so no dedup here
-        ids = jnp.take_along_axis(cand_i, sel, axis=1)
-    valid = (ids >= 0) & jnp.isfinite(ds) & ok_pt[:, None]
-
-    # forward edges: one dropped-padding scatter for the whole wave
-    row_i = jnp.full((W, M_max), -1, jnp.int32).at[:, :NN].set(jnp.where(valid, ids, -1))
-    row_d = jnp.full((W, M_max), INF, jnp.float32).at[:, :NN].set(jnp.where(valid, ds, INF))
+    adj, adj_d = wave_connect(
+        dist, consts, qc_all, adj, adj_d, pids, ok_pt, st.beam_i, st.beam_d,
+        NN=NN, L=L, R=R,
+    )
     dst = jnp.where(ok_pt, pids, cap)  # out-of-bounds rows are dropped
-    adj = adj.at[dst].set(row_i, mode="drop")
-    adj_d = adj_d.at[dst].set(row_d, mode="drop")
-
-    # reverse edges through the shared scatter-with-eviction merge
-    U = W * NN
-    flat_j = ids.reshape(U)
-    flat_ok = valid.reshape(U)
-    flat_i = jnp.repeat(safe_p, NN)
-    safe_j = jnp.where(flat_ok, flat_j, 0)
-    d_rev = jax.vmap(lambda i, j: _rev_score(dist, consts, qc_all, i, j))(flat_i, safe_j)
-    adj, adj_d = reverse_edge_merge(adj, adj_d, flat_j, flat_i, d_rev, flat_ok, R)
-
     alive = alive.at[dst].set(True, mode="drop")
     return adj, adj_d, alive
 
 
-def _rev_score(dist, consts, qc_all, i, j):
-    """d_build(x_i, x_j): i the candidate (left), j the owner (query side)."""
-    rows_i = jax.tree.map(lambda a: a[i[None]], consts)
-    qc_j = jax.tree.map(lambda a: a[j], qc_all)
-    return dist.score(rows_i, qc_j)[0].astype(jnp.float32)
+@jax.jit
+def _drop_edges_into(adj, adj_d, target):
+    """Remove every edge whose target slot is flagged for REUSE: the old
+    tombstoned point's stale incoming edges must not transfer to the new
+    point taking over the slot (they were computed against the dead
+    point's vector).  The reused rows themselves are fully overwritten by
+    the insert wave's forward scatter."""
+    safe = jnp.where(adj >= 0, adj, 0)
+    hit = (adj >= 0) & target[safe]
+    return jnp.where(hit, -1, adj), jnp.where(hit, INF, adj_d)
 
 
 @jax.jit
@@ -210,7 +188,7 @@ def _repair_wave(dist, adj, adj_d, consts, qc_all, alive, entries, pids, ok_pt,
     flat_ok = cand_ok.reshape(U)
     flat_i = jnp.repeat(safe_p, NN)
     safe_j = jnp.where(flat_ok, flat_j, 0)
-    d_rev = jax.vmap(lambda i, j: _rev_score(dist, consts, qc_all, i, j))(flat_i, safe_j)
+    d_rev = reverse_edge_scores(dist, consts, qc_all, flat_i, safe_j)
     return reverse_edge_merge(adj, adj_d, flat_j, flat_i, d_rev, flat_ok, R)
 
 
@@ -239,9 +217,11 @@ class OnlineIndex:
 
     State: ``X (capacity, m)``, ``adj``/``adj_d (capacity, M_max)``,
     ``alive (capacity,) bool`` and the host-side high-water mark
-    ``n_total`` (slots 0..n_total-1 have been inserted at some point; a slot
-    is live iff ``alive`` — tombstoned slots are never reused).  All device
-    arrays are fixed-shape, so churn never recompiles.
+    ``n_total`` (slots 0..n_total-1 have been inserted at some point; a
+    slot is live iff ``alive``).  Tombstoned slots land on a FREE LIST and
+    are reused by later inserts before the index grows into fresh suffix
+    capacity, so sustained +N/-N churn runs forever at constant capacity.
+    All device arrays are fixed-shape, so churn never recompiles.
     """
 
     def __init__(self, X, adj, adj_d, alive, n_total, build_dist, search_dist,
@@ -268,6 +248,14 @@ class OnlineIndex:
         self.entries = jnp.asarray(np.asarray(entries, np.int32))
         self._rng = np.random.default_rng(seed)
         self._sconsts_cache = None  # search-dist prep_scan, maintained per-row
+        self._free: list[int] = []  # tombstoned slots available for reuse (FIFO)
+        # mutation epoch: bumped per delete batch; killed_epoch[s] is the
+        # epoch slot s was last tombstoned.  The slot scheduler compares it
+        # against each request's admission epoch so a slot that died — and
+        # was possibly REUSED for a different point — mid-flight never
+        # surfaces in that request's response.
+        self.mutation_epoch: int = 0
+        self.killed_epoch = np.zeros((cap,), np.int64)
 
     # ------------------------------------------------------------- construct
 
@@ -310,17 +298,27 @@ class OnlineIndex:
 
     @property
     def free_slots(self) -> int:
-        return self.capacity - self.n_total
+        """Insertable slots: untouched suffix capacity + reusable tombstones."""
+        return self.capacity - self.n_total + len(self._free)
 
     # ------------------------------------------------------------- mutation
 
     def insert(self, X_new) -> np.ndarray:
-        """Insert new points; returns their assigned (stable) slot ids.
+        """Insert new points; returns their assigned slot ids.
+
+        Ids are ARENA ids: stable for the lifetime of the point, but a
+        deleted id's slot is recycled by later inserts, after which the id
+        names the NEW occupant (``killed_epoch`` records the tombstoning
+        epoch so in-flight readers — the slot scheduler — can detect it).
 
         Points are connected in waves of ``self.wave`` by frozen-graph beam
         searches + intra-wave links + the shared reverse-edge merge — the
-        online continuation of wave construction.  Raises ``ValueError``
-        when the batch does not fit in the remaining capacity.
+        online continuation of wave construction.  Tombstoned slots are
+        REUSED first (oldest delete first): the reused slot's stale
+        incoming edges are dropped so nothing computed against the dead
+        point leaks onto the new one, then the slot behaves exactly like a
+        fresh one.  Only the remainder grows into suffix capacity; raises
+        ``ValueError`` when the batch does not fit in ``free_slots``.
         """
         X_new = jnp.asarray(X_new)
         if X_new.ndim == 1:
@@ -328,14 +326,24 @@ class OnlineIndex:
         k = int(X_new.shape[0])
         if k == 0:
             return np.zeros((0,), np.int64)
-        if self.n_total + k > self.capacity:
+        if k > self.free_slots:
             raise ValueError(
                 f"insert of {k} points overflows capacity "
-                f"{self.capacity} (n_total={self.n_total}); "
+                f"{self.capacity} (n_total={self.n_total}, "
+                f"reusable tombstones={len(self._free)}); "
                 f"grow the index with a larger capacity or compact offline"
             )
-        ids = np.arange(self.n_total, self.n_total + k)
+        n_reuse = min(k, len(self._free))
+        reused = np.asarray(self._free[:n_reuse], np.int64)
+        self._free = self._free[n_reuse:]
+        fresh = np.arange(self.n_total, self.n_total + (k - n_reuse))
+        ids = np.concatenate([reused, fresh]).astype(np.int64)
         ids_j = jnp.asarray(ids, jnp.int32)
+        if n_reuse:
+            target = jnp.zeros((self.capacity,), bool).at[
+                jnp.asarray(reused, jnp.int32)
+            ].set(True)
+            self.adj, self.adj_d = _drop_edges_into(self.adj, self.adj_d, target)
         self.X = self.X.at[ids_j].set(X_new)
         new_consts = self.build_dist.prep_scan(X_new)
         self.consts = jax.tree.map(
@@ -369,7 +377,8 @@ class OnlineIndex:
                 self.alive, self.entries, jnp.asarray(pids), jnp.asarray(ok_pt),
                 NN=self.NN, ef=self.ef_construction, T=T, L=L, R=self.rev_rounds,
             )
-            self.n_total = int(chunk[-1]) + 1  # advance the high-water mark
+            # advance the high-water mark (reused slots sit below it already)
+            self.n_total = max(self.n_total, int(chunk.max()) + 1)
         self._refresh_entries()
         return ids
 
@@ -378,16 +387,21 @@ class OnlineIndex:
 
         Dead nodes stop appearing in results immediately (the engine's
         ``alive`` mask); their edges keep occupying graph slots until
-        ``compact()``.  Unknown / already-dead ids are ignored.
+        ``compact()`` — but the slots themselves join the free list and are
+        reused by later inserts.  Unknown / already-dead ids are ignored.
         """
         ids = np.unique(np.asarray(ids, np.int64).reshape(-1))
         ids = ids[(ids >= 0) & (ids < self.n_total)]
         if len(ids) == 0:
             return 0
         ids_j = jnp.asarray(ids, jnp.int32)
-        was_alive = int(jnp.sum(self.alive[ids_j], dtype=jnp.int32))
+        newly = np.asarray(self.alive[ids_j])
+        was_alive = int(newly.sum())
         if was_alive:
             self.alive = self.alive.at[ids_j].set(False)
+            self._free.extend(int(i) for i in ids[newly])
+            self.mutation_epoch += 1
+            self.killed_epoch[ids[newly]] = self.mutation_epoch
             self._refresh_entries()
         return was_alive
 

@@ -1,0 +1,436 @@
+"""Continuous-batching query scheduler: the slot-recycling beam engine.
+
+The lock-step engine (``batched_beam_search``) retires a whole batch only
+when its SLOWEST query converges — under strongly non-symmetric distances
+(KL, Itakura-Saito) per-query search difficulty varies sharply, so one
+straggler holds hostage every co-batched easy query, and a new batch cannot
+start until the old one drains.  This module serves queries the way an LLM
+inference server does continuous batching:
+
+  * the engine state is S fixed SLOTS, each carrying an independent query
+    with its own beam, visited set, and convergence flag;
+  * every host-side tick runs ``steps_per_sync`` lock-steps of the SAME
+    ``beam_step`` the batched engine uses (bit-identical state machine),
+    then retires every slot whose query converged — freeing the slot
+    IMMEDIATELY instead of at batch end;
+  * freed slots are refilled from a pending-request queue inside the step
+    loop.  Admission reuses ``seed_beams``, so an admitted query starts
+    from exactly the floats a batch-at-once query would start from;
+  * all device state is fixed-shape in (S, ef, capacity): steady-state
+    serving never recompiles, no matter how requests arrive.
+
+Per-query ADAPTIVE FRONTIER (``adaptive=True``): each slot carries its own
+frontier width ``t_cur`` ∈ [1, frontier].  The paper's cost unit is
+distance evaluations, and ``frontier > 1`` overspends them exactly while
+the beam radius is SHRINKING (the top-T candidates are expanded together,
+but expanding the best first would have pruned the rest).  The policy
+therefore tracks the beam radius per slot: while the radius is improving
+the slot expands 1 candidate per step (sequential-order evaluations); once
+it stalls for ``patience`` steps — the drain phase, where expansion order
+no longer changes the evaluation set — the width doubles per step back up
+to ``frontier`` to finish in few fat steps.  This recovers the paper's
+eval-reduction metric at batched-throughput wall-clock (see
+``benchmarks/bench_serve.py``).
+
+Mutability: the scheduler reads the graph through a ``graph_fn`` snapshot
+every tick, so an ``OnlineIndex`` can insert/delete/compact between ticks
+while queries are in flight.  Newly admitted queries see the current
+``alive`` mask; in-flight beams keep their admission-time view, and retire
+results are re-masked against the CURRENT ``alive`` so a point deleted
+mid-flight never reaches a response.
+"""
+
+from __future__ import annotations
+
+import collections
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batched_beam import (
+    BatchBeamState,
+    beam_step,
+    frontier_compact_width,
+    seed_beams,
+)
+from .distances import Distance
+
+INF = jnp.inf
+
+
+class GraphView(NamedTuple):
+    """One tick's snapshot of the (possibly mutable) index state."""
+
+    neighbors: jax.Array  # (n, M) int32 adjacency, -1 padding
+    consts: Any  # dist.prep_scan pytree, leading axis n
+    alive: Optional[jax.Array]  # (n,) bool tombstone mask, or None (static)
+    entries: jax.Array  # (E,) i32 unique beam entry nodes
+    epoch: int = 0  # mutation epoch at snapshot time
+    killed_epoch: Optional[np.ndarray] = None  # (n,) host i64: epoch each
+    # slot was last tombstoned — guards retire results against slots that
+    # died (and were possibly reused for a NEW point) mid-flight
+
+
+class SlotState(NamedTuple):
+    """Device state of the S slots (all arrays fixed-shape)."""
+
+    core: BatchBeamState  # per-slot beam state, leading axis S
+    occupied: jax.Array  # (S,) bool — slot holds an in-flight query
+    qc: Any  # per-slot prepped query constants, leading axis S
+    t_cur: jax.Array  # (S,) i32 adaptive frontier width (== T when fixed)
+    stall: jax.Array  # (S,) i32 steps since the slot's beam radius improved
+    worst: jax.Array  # (S,) f32 beam radius watermark for the policy
+
+
+@dataclass
+class SlotResult:
+    """One retired request (distances ascending, -1/inf padded)."""
+
+    rid: int
+    dists: np.ndarray  # (k,) f32
+    ids: np.ndarray  # (k,) i64 stable slot/database ids
+    n_evals: int
+    hops: int
+    t_arrival: float = 0.0
+    t_admit: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+class SlotScheduler:
+    """Slot-recycling continuous-batching searcher over a neighborhood graph.
+
+    Parameters
+    ----------
+    dist : search distance (PairDistance gather contract)
+    graph_fn : () -> GraphView — re-read every tick; array SHAPES must stay
+        fixed across calls (capacity-padded for mutable indexes)
+    dim : query vector dimensionality
+    slots : S, concurrent in-flight queries (the continuous batch)
+    ef, k : beam width / results per query (ef >= k)
+    frontier : max beam candidates expanded per slot per lock-step
+    adaptive : per-slot adaptive frontier width (see module docstring)
+    patience : stalled steps before the adaptive width starts regrowing
+    steps_per_sync : lock-steps run per host tick; >1 amortizes dispatch
+        overhead, at the cost of retire/refill granularity
+    use_pallas : scoring path, same semantics as ``make_step_searcher`` —
+        None routes single-matmul ``Distance`` scoring through the fused
+        gather kernel wrapper (einsum off-TPU, Pallas on TPU), False forces
+        the generic pytree path (the parity reference)
+    """
+
+    def __init__(self, dist, graph_fn: Callable[[], GraphView], *, dim: int,
+                 slots: int = 32, ef: int = 96, k: int = 10, frontier: int = 4,
+                 compact: int = 32, adaptive: bool = False, patience: int = 1,
+                 max_steps: Optional[int] = None, steps_per_sync: int = 1,
+                 use_pallas=None):
+        if ef < k:
+            raise ValueError(f"ef {ef} < k {k}")
+        if frontier < 1:
+            raise ValueError(f"frontier must be >= 1, got {frontier}")
+        g = graph_fn()
+        n, M = g.neighbors.shape
+        self.dist = dist
+        self.graph_fn = graph_fn
+        self.dim = int(dim)
+        self.S = int(slots)
+        self.ef = int(ef)
+        self.k = int(k)
+        self.T = int(min(frontier, ef))
+        self.C = frontier_compact_width(self.T, M, compact)
+        self.adaptive = bool(adaptive)
+        self.patience = int(max(1, patience))
+        self.max_steps = int(n if max_steps is None else max_steps)
+        self.steps_per_sync = int(max(1, steps_per_sync))
+        self._masked = g.alive is not None
+        self._n = n
+        self._dtype = jax.tree.leaves(g.consts)[0].dtype
+        self._use_pallas = use_pallas
+        self._kernel_ok = isinstance(dist, Distance) and use_pallas is not False
+        self._rid_gen = itertools.count()
+        self._queue: collections.deque = collections.deque()
+        self._build_jits()
+        self.reset()
+
+    # ------------------------------------------------------------- jit setup
+
+    def _score_fn(self, consts, qc):
+        dist = self.dist
+        if self._kernel_ok:
+            from repro.kernels.ops import frontier_gather_scores
+            use_pallas = self._use_pallas
+
+            def score_rows(ids):
+                return frontier_gather_scores(
+                    dist, ids, qc["rep"], qc["bias"], consts["rep"],
+                    consts["bias"], use_pallas=use_pallas,
+                )
+        else:
+
+            def score_rows(ids):
+                rows = jax.tree.map(lambda a: a[ids], consts)
+                return jax.vmap(dist.score)(rows, qc)
+
+        return score_rows
+
+    def _build_jits(self):
+        S, ef, T, C = self.S, self.ef, self.T, self.C
+        dist, n, max_steps = self.dist, self._n, self.max_steps
+        adaptive, patience = self.adaptive, self.patience
+
+        def admit(state: SlotState, Q_new, write, consts, entries, alive):
+            qc_new = jax.vmap(dist.prep_query)(Q_new)
+            score_rows = self._score_fn(consts, qc_new)
+            fresh = seed_beams(score_rows, entries, S, ef, n, alive=alive)
+
+            def sel(a, b):
+                w = write.reshape((S,) + (1,) * (a.ndim - 1))
+                return jnp.where(w, a, b)
+
+            # adaptive slots start at width 1: admission begins the
+            # fill/descent phase, where sequential-order expansion is the
+            # whole point of the policy
+            return SlotState(
+                core=jax.tree.map(sel, fresh, state.core),
+                occupied=state.occupied | write,
+                qc=jax.tree.map(sel, qc_new, state.qc),
+                t_cur=jnp.where(write, 1 if adaptive else T, state.t_cur),
+                stall=jnp.where(write, 0, state.stall),
+                worst=jnp.where(write, INF, state.worst),
+            )
+
+        def step(state: SlotState, neighbors, consts):
+            score_rows = self._score_fn(consts, state.qc)
+            core, t_cur, stall, worst = (state.core, state.t_cur, state.stall,
+                                         state.worst)
+            for _ in range(self.steps_per_sync):
+                t_act = t_cur if adaptive else None
+                core = beam_step(core, neighbors, score_rows, ef, T, C,
+                                 max_steps, t_active=t_act)
+                if adaptive:
+                    # the beam radius (worst member) is the pruning
+                    # threshold: while it is still shrinking — or the beam
+                    # has not even filled (greedy-descent phase, radius
+                    # +inf) — expansion ORDER matters and top-T overspends
+                    # evaluations, so expand sequentially; once it stalls
+                    # for `patience` steps the evaluation set is fixed and
+                    # the width regrows to drain the beam in fat steps.
+                    radius = core.beam_d[:, -1]
+                    improved = (radius < worst) | ~jnp.isfinite(radius)
+                    stall = jnp.where(improved, 0, stall + 1)
+                    t_cur = jnp.where(
+                        improved,
+                        1,
+                        jnp.where(stall >= patience,
+                                  jnp.minimum(t_cur * 2, T), t_cur),
+                    )
+                    worst = radius
+            return state._replace(core=core, t_cur=t_cur, stall=stall,
+                                  worst=worst)
+
+        def release(state: SlotState, freed):
+            return state._replace(occupied=state.occupied & ~freed)
+
+        self._admit = jax.jit(admit)
+        self._step = jax.jit(step)
+        self._release = jax.jit(release)
+
+    # ----------------------------------------------------------- state mgmt
+
+    def reset(self):
+        """Clear all slots, the pending queue, and per-request bookkeeping."""
+        S, ef = self.S, self.ef
+        nw = -(-self._n // 32)
+        core = BatchBeamState(
+            beam_d=jnp.full((S, ef), INF, jnp.float32),
+            beam_i=jnp.full((S, ef), -1, jnp.int32),
+            expanded=jnp.ones((S, ef), bool),
+            visited=jnp.zeros((S, nw), jnp.uint32),
+            n_evals=jnp.zeros((S,), jnp.int32),
+            hops=jnp.zeros((S,), jnp.int32),
+            done=jnp.ones((S,), bool),
+        )
+        # uniform histogram placeholder: valid under every registry distance,
+        # so idle slots never score NaNs (their rows are masked anyway)
+        q0 = jnp.full((S, self.dim), 1.0 / self.dim, self._dtype)
+        qc = jax.vmap(self.dist.prep_query)(q0)
+        self.state = SlotState(
+            core=core,
+            occupied=jnp.zeros((S,), bool),
+            qc=qc,
+            t_cur=jnp.full((S,), self.T, jnp.int32),
+            stall=jnp.zeros((S,), jnp.int32),
+            worst=jnp.full((S,), INF, jnp.float32),
+        )
+        self._queue.clear()
+        self._slot_rid = np.full((S,), -1, np.int64)
+        # rid -> (arrival, admit time, admission epoch)
+        self._meta: dict[int, tuple[float, float, int]] = {}
+
+    @property
+    def n_inflight(self) -> int:
+        return int((self._slot_rid >= 0).sum())
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue)
+
+    # -------------------------------------------------------------- serving
+
+    def submit(self, q, rid: Optional[int] = None, t_arrival: float = 0.0) -> int:
+        """Enqueue one query row; returns its request id."""
+        if rid is None:
+            rid = next(self._rid_gen)
+        self._queue.append((int(rid), np.asarray(q), float(t_arrival)))
+        return int(rid)
+
+    def tick(self, now: float = 0.0) -> list[SlotResult]:
+        """Admit pending requests into free slots, run ``steps_per_sync``
+        lock-steps, retire every converged slot.  Returns retired results
+        (``t_done`` left for the caller's clock)."""
+        g = self.graph_fn()
+        free = np.flatnonzero(self._slot_rid < 0)
+        if len(free) and self._queue:
+            take = min(len(free), len(self._queue))
+            Q_new = np.full((self.S, self.dim), 1.0 / self.dim, np.float32)
+            write = np.zeros((self.S,), bool)
+            for s in free[:take]:
+                rid, q, t_arr = self._queue.popleft()
+                Q_new[s] = q
+                write[s] = True
+                self._slot_rid[s] = rid
+                self._meta[rid] = (t_arr, now, g.epoch)
+            self.state = self._admit(
+                self.state, jnp.asarray(Q_new, self._dtype), jnp.asarray(write),
+                g.consts, g.entries, g.alive,
+            )
+        if not (self._slot_rid >= 0).any():
+            return []
+
+        self.state = self._step(self.state, g.neighbors, g.consts)
+
+        done = np.asarray(self.state.core.done)  # syncs the step
+        finished = done & (self._slot_rid >= 0)
+        if not finished.any():
+            return []
+        # fixed-shape device reads (full S rows, host-side row select): a
+        # per-retire fancy gather would compile one executable per distinct
+        # retired-count and stall serving on recompiles.  Masked serving
+        # reads the FULL ef-wide beam so voided top-k entries backfill from
+        # the alive candidates the search already ranked at k..ef.
+        idx = np.flatnonzero(finished)
+        width = self.ef if self._masked else self.k
+        d = np.asarray(self.state.core.beam_d[:, :width])[idx]
+        ids = np.asarray(self.state.core.beam_i[:, :width]).astype(np.int64)[idx]
+        evals = np.asarray(self.state.core.n_evals)[idx]
+        hops = np.asarray(self.state.core.hops)[idx]
+        metas = [self._meta.pop(int(self._slot_rid[s]), (0.0, 0.0, 0))
+                 for s in idx]
+        if self._masked and g.alive is not None:
+            # points tombstoned while this query was in flight must not
+            # surface: void them and compact each row (stable order).  The
+            # killed-epoch guard additionally catches slots that died AND
+            # were reused for a different point since this request's
+            # admission — `alive` alone would vouch for the impostor.
+            safe = np.where(ids >= 0, ids, 0)
+            dead = ~np.asarray(g.alive)[safe]
+            if g.killed_epoch is not None:
+                admit_epoch = np.asarray([m[2] for m in metas])[:, None]
+                dead |= g.killed_epoch[safe] > admit_epoch
+            dead &= ids >= 0
+            if dead.any():
+                d = np.where(dead, np.inf, d)
+                ids = np.where(dead, -1, ids)
+                order = np.argsort(np.where(np.isfinite(d), 0, 1), axis=1,
+                                   kind="stable")
+                d = np.take_along_axis(d, order, axis=1)
+                ids = np.take_along_axis(ids, order, axis=1)
+        d, ids = d[:, : self.k], ids[:, : self.k]
+
+        out = []
+        for j, s in enumerate(idx):
+            rid = int(self._slot_rid[s])
+            t_arr, t_adm, _ = metas[j]
+            out.append(SlotResult(rid=rid, dists=d[j], ids=ids[j],
+                                  n_evals=int(evals[j]), hops=int(hops[j]),
+                                  t_arrival=t_arr, t_admit=t_adm))
+            self._slot_rid[s] = -1
+        self.state = self._release(self.state, jnp.asarray(finished))
+        return out
+
+    def drain(self, now: float = 0.0) -> list[SlotResult]:
+        """Run ticks until the queue and every slot are empty."""
+        out = []
+        while self._queue or (self._slot_rid >= 0).any():
+            out.extend(self.tick(now))
+        return out
+
+    def warmup(self, q=None):
+        """Compile the admit/step/retire paths outside any timed region."""
+        if q is None:
+            q = np.full((self.dim,), 1.0 / self.dim, np.float32)
+        self.submit(np.asarray(q))
+        self.drain()
+        self.reset()
+
+    # ----------------------------------------------------------- simulation
+
+    def run_stream(self, Q, arrivals=None, realtime: bool = False,
+                   warm: bool = True) -> list[SlotResult]:
+        """Serve a request stream with per-request arrival times.
+
+        ``arrivals=None`` submits everything at t=0 (a closed batch).  By
+        default the clock is VIRTUAL: it advances only by the measured
+        compute time of each tick, so latency percentiles reflect scheduler
+        behavior rather than host sleep jitter; ``realtime=True`` uses the
+        wall clock and sleeps through idle gaps instead (the serving
+        driver's mode).  Returns results ordered by request index, with
+        ``t_arrival``/``t_admit``/``t_done`` filled in on the chosen clock.
+        """
+        Q = np.asarray(Q)
+        n_req = Q.shape[0]
+        if arrivals is None:
+            arrivals = np.zeros((n_req,), float)
+        arrivals = np.asarray(arrivals, float)
+        order = np.argsort(arrivals, kind="stable")
+        if warm:
+            self.warmup(Q[0])
+        else:
+            self.reset()
+        results: dict[int, SlotResult] = {}
+        t0 = time.perf_counter()
+        clock = 0.0
+        i = 0
+        while len(results) < n_req:
+            if realtime:
+                clock = time.perf_counter() - t0
+            while i < n_req and arrivals[order[i]] <= clock:
+                rid = int(order[i])
+                self.submit(Q[rid], rid=rid, t_arrival=float(arrivals[rid]))
+                i += 1
+            if not self._queue and not (self._slot_rid >= 0).any():
+                # idle: jump (or sleep) to the next arrival
+                nxt = float(arrivals[order[i]])
+                if realtime:
+                    time.sleep(max(0.0, nxt - (time.perf_counter() - t0)))
+                else:
+                    clock = nxt
+                continue
+            tick_t0 = time.perf_counter()
+            finished = self.tick(now=clock)
+            if realtime:
+                clock = time.perf_counter() - t0
+            else:
+                clock += time.perf_counter() - tick_t0
+            for r in finished:
+                r.t_done = clock
+                results[r.rid] = r
+        return [results[j] for j in range(n_req)]

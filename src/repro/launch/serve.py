@@ -12,6 +12,16 @@ Mutation endpoints (``--churn-rounds`` > 0): the index is built with a
 repro.core.online); each round reports mutation throughput and query
 latency, and the loop ends with a ``compact()`` + recall audit against an
 exact scan of the surviving set.
+
+Continuous batching (``--continuous``): instead of fixed dispatch batches,
+requests stream in as a Poisson process (rate = ``--utilization`` x the
+measured static-batch capacity) and are served by the slot-recycling
+scheduler (``repro.core.scheduler``): each of ``--slots`` slots retires its
+query the moment it converges and is refilled from the admission queue, so
+straggler queries stop inflating every co-batched request's latency.  The
+driver reports p50/p95/p99 latency for BOTH disciplines over the identical
+arrival trace, plus the per-query adaptive-frontier evaluation counts when
+``--adaptive-frontier`` is set.
 """
 
 from __future__ import annotations
@@ -25,6 +35,86 @@ import numpy as np
 from repro.core import ANNIndex, get_distance, knn_scan, recall_at_k
 from repro.core.metrics import speedup_model
 from repro.data.synthetic import lda_like_histograms, split_queries
+
+
+# ---------------------------------------------------------------------------
+# arrival processes + serving-discipline simulators (shared with bench_serve)
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(n: int, rate: float, rng=None) -> np.ndarray:
+    """Cumulative arrival times (seconds) of a rate-``rate`` Poisson process."""
+    rng = rng or np.random.default_rng(0)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def latency_stats(lat_s, prefix: str = "") -> dict:
+    """p50/p95/p99 latency percentiles (ms) of per-request latencies."""
+    lat_s = np.asarray(lat_s, float)
+    return {
+        f"{prefix}p50_ms": round(1e3 * float(np.percentile(lat_s, 50)), 3),
+        f"{prefix}p95_ms": round(1e3 * float(np.percentile(lat_s, 95)), 3),
+        f"{prefix}p99_ms": round(1e3 * float(np.percentile(lat_s, 99)), 3),
+    }
+
+
+def simulate_static_batches(search, Q, arrivals, batch: int):
+    """Static-batching baseline on a virtual clock, real measured compute.
+
+    Requests are grouped into dispatch batches of ``batch`` in arrival
+    order; a batch dispatches when its last member has arrived AND the
+    single server is free (each batch then occupies the server for its
+    measured ``search`` wall time — the lock-step engine runs every query
+    until the SLOWEST one converges).  Latency of request r is
+    ``t_batch_done - t_arrival[r]``: the fill wait + queue wait + straggler
+    wait that continuous batching removes.  The virtual clock advances only
+    by measured compute, so percentiles are free of host sleep jitter.
+
+    Returns (latencies (n,), ids (n, k), n_evals (n,)) in request order.
+    """
+    Q = np.asarray(Q)
+    arrivals = np.asarray(arrivals, float)
+    n = Q.shape[0]
+    order = np.argsort(arrivals, kind="stable")
+    lat = np.zeros((n,), float)
+    evals = np.zeros((n,), np.int64)
+    rows = {}
+    t_free = 0.0
+    for lo in range(0, n, batch):
+        sel = order[lo:lo + batch]
+        t0 = time.perf_counter()
+        out = search(Q[sel])
+        jax.block_until_ready(out[0])
+        service = time.perf_counter() - t0
+        t_disp = max(t_free, float(arrivals[sel].max()))
+        t_done = t_disp + service
+        t_free = t_done
+        lat[sel] = t_done - arrivals[sel]
+        batch_ids = np.asarray(out[1])
+        batch_evals = np.asarray(out[2])
+        for j, r in enumerate(sel):
+            rows[int(r)] = batch_ids[j]
+            evals[r] = batch_evals[j]
+    ids_out = np.stack([rows[j] for j in range(n)])
+    return lat, ids_out, evals
+
+
+def run_continuous(idx, Q, arrivals, *, k: int, ef_search: int, slots: int,
+                   frontier: int, adaptive: bool = False,
+                   steps_per_sync: int = 4, realtime: bool = False):
+    """Serve the arrival trace through the slot scheduler.
+
+    Returns (latencies (n,), ids (n, k), n_evals (n,)) in request order —
+    the same contract as ``simulate_static_batches`` so callers can compare
+    the two disciplines on identical traffic.
+    """
+    sched = idx.scheduler(k, ef_search, slots=slots, frontier=frontier,
+                          adaptive=adaptive, steps_per_sync=steps_per_sync)
+    res = sched.run_stream(np.asarray(Q), arrivals, realtime=realtime)
+    lat = np.asarray([r.latency for r in res])
+    ids = np.stack([r.ids for r in res])
+    evals = np.asarray([r.n_evals for r in res])
+    return lat, ids, evals
 
 
 def run_churn(idx, Q, pool, *, rounds: int, insert_n: int, delete_n: int,
@@ -100,7 +190,9 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
                     frontier: int = 4, n_entries: int = 4,
                     capacity: int | None = None, churn_rounds: int = 0,
                     churn_insert: int = 256, churn_delete: int = 200,
-                    verbose: bool = True):
+                    continuous: bool = False, slots: int = 48,
+                    cont_frontier: int = 12, adaptive_frontier: bool = False,
+                    utilization: float = 0.4, verbose: bool = True):
     key = jax.random.PRNGKey(0)
     pool_n = churn_rounds * churn_insert
     data = lda_like_histograms(key, n_db + n_queries + pool_n, dim)
@@ -132,14 +224,15 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
     # ground truth for quality accounting
     _, true_ids = knn_scan(dist, Q, X, k)
 
-    served, evals, lat = 0, [], []
+    served, evals, lat, batch_s = 0, [], [], []
     all_ids = []
     for lo in range(0, n_queries, batch):
         qb = Q[lo:lo + batch]
         t0 = time.time()
         d, ids, n_evals, hops = search(qb)
         jax.block_until_ready(d)
-        lat.append((time.time() - t0) / qb.shape[0])
+        batch_s.append(time.time() - t0)
+        lat.append(batch_s[-1] / qb.shape[0])
         served += qb.shape[0]
         evals.append(np.asarray(n_evals))
         all_ids.append(np.asarray(ids))
@@ -157,6 +250,49 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
     if verbose:
         print(f"[serve] dist={distance} index_sym={index_sym} n={n_db} "
               f"-> {stats}")
+
+    if continuous:
+        # Poisson load at `utilization` x the measured static capacity, so
+        # the offered traffic adapts to the machine running the driver
+        rate = utilization * batch / float(np.median(batch_s))
+        if adaptive_frontier:
+            # the adaptive engine trades steps for evaluations (sequential
+            # expansion while the beam improves): anchor its offered load
+            # to ITS measured capacity, or the queue saturates and reports
+            # queueing delay instead of scheduler latency
+            probe = idx.scheduler(k, ef_search, slots=slots,
+                                  frontier=cont_frontier, adaptive=True,
+                                  steps_per_sync=4)
+            n_probe = min(96, n_queries)
+            res = probe.run_stream(np.asarray(Q[:n_probe]))
+            # the stream's virtual clock counts tick compute only (warmup
+            # compiles are excluded), so max t_done is the drain time
+            rate = min(rate, utilization * n_probe /
+                       max(r.t_done for r in res))
+        arrivals = poisson_arrivals(n_queries, rate, np.random.default_rng(1))
+        s_lat, s_ids, _ = simulate_static_batches(search, Q, arrivals, batch)
+        # the slot engine's latency is (steps x tick), not batch service, so
+        # it prefers a fatter frontier than the dispatch-batched engine
+        c_lat, c_ids, c_evals = run_continuous(
+            idx, Q, arrivals, k=k, ef_search=ef_search, slots=slots,
+            frontier=cont_frontier, adaptive=adaptive_frontier,
+        )
+        cont = {
+            "offered_qps": round(rate, 1),
+            "slots": slots,
+            "frontier": cont_frontier,
+            "adaptive_frontier": adaptive_frontier,
+            "recall@k": round(recall_at_k(c_ids, np.asarray(true_ids)), 4),
+            "eval_reduction": round(speedup_model(n_db, c_evals), 1),
+            **latency_stats(c_lat),
+            "static_p99_ms": latency_stats(s_lat)["p99_ms"],
+            "p99_speedup_vs_static": round(
+                float(np.percentile(s_lat, 99) / np.percentile(c_lat, 99)), 2),
+        }
+        stats["continuous"] = cont
+        if verbose:
+            print(f"[serve/continuous] {cont}")
+
     if churn_rounds > 0:
         stats["churn"] = run_churn(
             idx, Q, pool, rounds=churn_rounds, insert_n=churn_insert,
@@ -195,6 +331,22 @@ def main():
                     help="points inserted per churn round")
     ap.add_argument("--churn-delete", type=int, default=200,
                     help="points tombstoned per churn round")
+    ap.add_argument("--continuous", action="store_true",
+                    help="also serve a Poisson arrival trace through the "
+                         "slot-recycling scheduler and compare latency "
+                         "percentiles against static batching")
+    ap.add_argument("--slots", type=int, default=48,
+                    help="concurrent in-flight queries in the scheduler")
+    ap.add_argument("--cont-frontier", type=int, default=12,
+                    help="per-slot frontier for the continuous scheduler "
+                         "(fatter than --frontier: slot latency is steps x "
+                         "tick, not batch service)")
+    ap.add_argument("--adaptive-frontier", action="store_true",
+                    help="per-slot adaptive frontier width (fewer distance "
+                         "evaluations at equal recall)")
+    ap.add_argument("--utilization", type=float, default=0.4,
+                    help="Poisson arrival rate as a fraction of the measured "
+                         "static-batch capacity")
     args = ap.parse_args()
     build_and_serve(distance=args.distance, n_db=args.n_db, dim=args.dim,
                     n_queries=args.queries, batch=args.batch,
@@ -204,7 +356,11 @@ def main():
                     n_entries=args.entries, capacity=args.capacity,
                     churn_rounds=args.churn_rounds,
                     churn_insert=args.churn_insert,
-                    churn_delete=args.churn_delete)
+                    churn_delete=args.churn_delete,
+                    continuous=args.continuous, slots=args.slots,
+                    cont_frontier=args.cont_frontier,
+                    adaptive_frontier=args.adaptive_frontier,
+                    utilization=args.utilization)
 
 
 if __name__ == "__main__":

@@ -46,8 +46,17 @@ def _online_doc():
     }
 
 
+def _serve_doc():
+    return {
+        "static": {"capacity_qps": 1300.0, "recall@10": 0.9995, "p99_ms": 115.0},
+        "continuous": {"slots": 48, "recall@10": 0.9995, "p99_ms": 38.0},
+        "adaptive": {"recall@10": 0.9995, "eval_reduction_pct": 52.3},
+        "slo": {"offered_qps": 394.0, "p50_speedup": 2.2, "p99_speedup": 3.0},
+    }
+
+
 def test_identical_runs_pass():
-    for doc in (_engine_doc(), _build_doc(), _online_doc()):
+    for doc in (_engine_doc(), _build_doc(), _online_doc(), _serve_doc()):
         rows, failures, _ = compare(doc, copy.deepcopy(doc), qps_tol=0.15, recall_tol=0.005)
         assert rows and not failures
 
@@ -125,6 +134,31 @@ def test_online_schema_gates_insert_throughput_and_recalls():
     _, failures, cal = compare(_online_doc(), fresh, qps_tol=0.15,
                                recall_tol=0.005, calibrate=True)
     assert not failures and cal == pytest.approx(0.5)
+
+
+def test_serve_schema_gates_ratios_and_recalls_uncalibrated():
+    """The serve gate checks machine-independent ratios: a collapsing p99
+    speedup or shrinking adaptive eval reduction fails; absolute latencies
+    (runner-class dependent) are never gated; --calibrate is a no-op."""
+    fresh = _serve_doc()
+    fresh["slo"]["p99_speedup"] = 2.0  # 3.0 -> 2.0: scheduler SLO regression
+    _, failures, cal = compare(_serve_doc(), fresh, qps_tol=0.2,
+                               recall_tol=0.005, calibrate=True)
+    assert [(f["section"], f["metric"]) for f in failures] == [
+        ("slo", "p99_speedup")
+    ]
+    assert cal == 1.0  # calibration=None schema: never rescaled
+    fresh = _serve_doc()
+    fresh["adaptive"]["eval_reduction_pct"] = 30.0  # adaptive policy broke
+    _, failures, _ = compare(_serve_doc(), fresh, qps_tol=0.2, recall_tol=0.005)
+    assert [f["metric"] for f in failures] == ["eval_reduction_pct"]
+    fresh = _serve_doc()
+    fresh["continuous"]["recall@10"] -= 0.01
+    fresh["continuous"]["p99_ms"] *= 4.0  # absolute latency: NOT gated
+    _, failures, _ = compare(_serve_doc(), fresh, qps_tol=0.2, recall_tol=0.005)
+    assert [(f["section"], f["metric"]) for f in failures] == [
+        ("continuous", "recall@10")
+    ]
 
 
 def test_only_matching_configs_compared():

@@ -169,6 +169,44 @@ def test_multiwave_insert_after_wipe_stays_connected(data):
     np.testing.assert_array_equal(np.asarray(ids)[:, 0], back)
 
 
+def test_sustained_churn_at_constant_capacity(data):
+    """ISSUE-4 satellite: +N/-N churn with ZERO capacity slack — tombstoned
+    slots are recycled through the free list before the suffix grows, so
+    long-lived churn never exhausts ``capacity`` (pre-free-list this raised
+    after the first round)."""
+    _, db, X_new = data
+    dist = get_distance("kl")
+    n0, per_round, rounds = 200, 40, 6
+    idx = ANNIndex.build(db[:n0], dist, capacity=n0,
+                         key=jax.random.PRNGKey(9), **BUILD)
+    o = idx.online
+    pool = jnp.concatenate([X_new, db[n0:]])
+    rng = np.random.default_rng(3)
+    for r in range(rounds):
+        alive_ids = np.flatnonzero(np.asarray(o.alive))
+        victims = rng.choice(alive_ids, size=per_round, replace=False)
+        assert idx.delete(victims) == per_round
+        lo = (r * per_round) % (pool.shape[0] - per_round)
+        ids = idx.insert(pool[lo:lo + per_round])
+        assert np.asarray(o.alive)[ids].all()
+    # 240 points streamed through a 200-slot index: only reuse makes it fit
+    assert rounds * per_round > o.capacity - n0
+    assert o.n_total == n0 and o.n_alive == n0 and o.free_slots == 0
+    check_adjacency_invariants(o.adj[: o.n_total], o.n_total, o.M_max,
+                               adj_d=o.adj_d[: o.n_total])
+    # the latest round's inserts are immediately retrievable
+    d, got, _, _ = idx.search(o.X[jnp.asarray(ids[:8])], k=1, ef_search=64)
+    np.testing.assert_array_equal(np.asarray(got)[:, 0], ids[:8])
+    np.testing.assert_allclose(np.asarray(d)[:, 0], 0.0, atol=1e-4)
+    # a reused slot must carry NO stale incoming edge: every finite slot
+    # distance agrees with the build distance of the CURRENT points
+    from repro.core.online import _edge_distances
+    fresh_d = np.asarray(_edge_distances(o.build_dist, o.adj, o.consts, o.qc_all))
+    occ = np.asarray(o.adj) >= 0
+    np.testing.assert_allclose(np.asarray(o.adj_d)[occ], fresh_d[occ],
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_lazy_online_conversion_and_engine_guard(data):
     """Mutation on a capacity-less index converts lazily (2n default);
     the frozen reference engine refuses to serve the mutable graph."""

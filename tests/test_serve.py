@@ -1,0 +1,49 @@
+"""Serving driver endpoints: in-process smoke over the full service loop.
+
+Covers the three serving surfaces of ``repro.launch.serve`` on one tiny
+workload: plain batched search, the ``--churn-*`` mutation endpoints
+(insert/delete/query rounds + compact + recall audit), and the
+continuous-batching scheduler path (Poisson trace served by both
+disciplines; the request -> queue -> slot -> response mapping itself is
+asserted in tests/test_scheduler.py).
+"""
+
+import numpy as np
+
+from repro.launch.serve import build_and_serve, poisson_arrivals
+
+
+def test_poisson_arrivals_shape_and_rate():
+    arr = poisson_arrivals(4000, 100.0, np.random.default_rng(0))
+    assert arr.shape == (4000,)
+    assert np.all(np.diff(arr) > 0)
+    # mean inter-arrival ~ 1/rate (law of large numbers, loose bound)
+    assert 0.008 < float(np.diff(arr).mean()) < 0.012
+
+
+def test_serve_endpoints_search_churn_continuous():
+    stats = build_and_serve(
+        distance="kl", n_db=400, dim=16, n_queries=64, batch=16, k=10,
+        ef_search=48, builder="swgraph", build_engine="wave", wave=16,
+        churn_rounds=2, churn_insert=32, churn_delete=24,
+        continuous=True, slots=8, utilization=0.5, verbose=False,
+    )
+    # -- plain batched serving
+    assert stats["served"] == 64
+    assert stats["recall@k"] >= 0.85
+
+    # -- continuous-batching path: same traffic, slot scheduler
+    cont = stats["continuous"]
+    assert cont["slots"] == 8
+    assert cont["recall@k"] >= stats["recall@k"] - 0.02
+    assert cont["p50_ms"] > 0 and cont["p99_ms"] >= cont["p50_ms"]
+    assert cont["offered_qps"] > 0
+
+    # -- churn mutation endpoints (online mutable index underneath)
+    churn = stats["churn"]
+    assert churn["inserted"] == 64 and churn["deleted"] == 48
+    assert churn["inserts_per_s"] > 0 and churn["deletes_per_s"] > 0
+    assert churn["recall@k_after_churn"] >= 0.8
+    assert churn["n_alive"] == 400 + 64 - 48
+    # free-list reuse keeps the footprint below naive append-only growth
+    assert churn["capacity_used"] <= 400 + 64
