@@ -20,7 +20,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import knn_scan, recall_at_k
+from repro.core import RetrievalSpec, knn_scan, recall_at_k
 from repro.core.batched_beam import make_step_searcher, select_entries
 from repro.core.build_engine import build_swgraph_wave
 from repro.core.distances import get_distance
@@ -111,10 +111,16 @@ def run_build_engine(out_path: str = "BENCH_build_engine.json", quick: bool = Fa
     eps = 0.005
     at_equal = [w for w in waves if w["recall@10"] >= sequential["recall@10"] - eps]
     best = max(at_equal, key=lambda w: w["speedup_vs_sequential"]) if at_equal else None
+    # the scenario every row varies (wave/frontier aside), self-described
+    base_spec = RetrievalSpec(distance="kl", builder="swgraph",
+                              build_engine="wave", NN=NN,
+                              ef_construction=EF_C, k=K, ef_search=EF_SEARCH)
     result = {
         "workload": {"distance": "kl", "n_db": n_db, "n_queries": n_q, "dim": dim,
                      "k": K, "NN": NN, "ef_construction": EF_C,
                      "ef_search": EF_SEARCH, "backend": jax.default_backend()},
+        "spec": base_spec.to_dict(),
+        "spec_fingerprint": base_spec.fingerprint(),
         "sequential": sequential,
         "wave_frontier": waves,
         "nndescent": nnd,

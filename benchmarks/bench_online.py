@@ -27,10 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ANNIndex, knn_scan, recall_at_k
+from repro.core import ANNIndex, RetrievalSpec, knn_scan, recall_at_k
 from repro.core.batched_beam import make_step_searcher, select_entries
 from repro.core.build_engine import build_swgraph_wave
-from repro.core.distances import get_distance
 from repro.data.synthetic import lda_like_histograms, split_queries
 
 NN, EF_C, EF_S, K, WAVE, ROUNDS = 15, 100, 96, 10, 64, 4
@@ -46,13 +45,12 @@ def run_online(out_path: str = "BENCH_online.json", quick: bool = False):
     data = lda_like_histograms(key, n0 + n_q + ins_total, dim)
     Q, rest = split_queries(data, n_q, jax.random.fold_in(key, 1))
     X, pool = rest[:n0], rest[n0:]
-    dist = get_distance("kl")
+    spec = RetrievalSpec(distance="kl", builder="swgraph", build_engine="wave",
+                         wave=WAVE, NN=NN, ef_construction=EF_C,
+                         capacity=n0 + ins_total, k=K, ef_search=EF_S)
+    dist = spec.base_distance()
 
-    idx = ANNIndex.build(
-        X, dist, builder="swgraph", build_engine="wave", wave=WAVE, NN=NN,
-        ef_construction=EF_C, capacity=n0 + ins_total,
-        key=jax.random.fold_in(key, 2),
-    )
+    idx = ANNIndex.build(X, spec=spec, key=jax.random.fold_in(key, 2))
     online = idx.online
     rng = np.random.default_rng(0)
 
@@ -150,6 +148,8 @@ def run_online(out_path: str = "BENCH_online.json", quick: bool = False):
                      "ef_search": EF_S, "rounds": ROUNDS,
                      "inserted": ins_total, "deleted": del_total,
                      "backend": jax.default_backend()},
+        "spec": spec.to_dict(),
+        "spec_fingerprint": spec.fingerprint(),
         "rebuild": rebuild,
         "insert": insert,
         "churn_query": churn_query,

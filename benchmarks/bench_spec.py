@@ -1,0 +1,88 @@
+"""Blend(alpha) graph-construction distance sweep (the ISSUE-5 workload).
+
+The paper's closing observation — building the graph under a *modified*
+distance while searching under the original one "paves a way to designing
+index-specific graph-construction distance functions" — becomes a one-knob
+sweep with ``RetrievalSpec``: ``build_policy=Blend(alpha)`` interpolates
+between the argument-reversed construction distance (alpha=0), the paper's
+avg symmetrization (alpha=0.5) and the original distance (alpha=1), while
+EVERY index is searched under the original KL divergence.
+
+For each alpha and each efSearch the harness records recall@10 and the
+distance-evaluation reduction over brute force (the paper's
+hardware-independent cost metric) with a FIXED frontier=1 searcher, so the
+sweep exposes the recall/evals tradeoff of the construction distance alone.
+Results land in BENCH_spec.json (each row self-described by the spec
+fingerprint); CI gates the quick run against
+benchmarks/baselines/BENCH_spec.quick.json via the "spec" schema of
+compare_bench.py (eval_reduction is a ratio — no machine calibration).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from repro.core import ANNIndex, Blend, RetrievalSpec, knn_scan, recall_at_k
+from repro.core.metrics import speedup_model
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+ALPHAS = [0.0, 0.25, 0.5, 0.75, 1.0]
+K, NN, EF_C, WAVE = 10, 15, 100, 64
+
+
+def run_spec(out_path: str = "BENCH_spec.json", quick: bool = False):
+    n_db, n_q, dim = (2048, 96, 32) if quick else (4096, 128, 32)
+    efs = [32, 96] if quick else [32, 96, 256]
+    key = jax.random.PRNGKey(0)
+    data = lda_like_histograms(key, n_db + n_q, dim)
+    Q, X = split_queries(data, n_q, jax.random.fold_in(key, 1))
+
+    base = RetrievalSpec(
+        distance="kl", builder="swgraph", build_engine="wave", wave=WAVE,
+        NN=NN, ef_construction=EF_C, k=K, frontier=1,
+    )
+    dist = base.base_distance()
+    _, true_ids = knn_scan(dist, Q, X, K)
+    true_np = np.asarray(true_ids)
+
+    rows = []
+    for spec in base.grid(build_policy=[Blend(a) for a in ALPHAS]):
+        alpha = spec.build_policy.alpha
+        idx = ANNIndex.build(X, spec=spec, key=jax.random.fold_in(key, 2))
+        for ef in efs:
+            search = idx.searcher(spec=spec.replace(ef_search=ef))
+            _, ids, n_evals, _ = search(Q)
+            jax.block_until_ready(ids)
+            row = {
+                "alpha": alpha,
+                "ef": ef,
+                "recall@10": round(recall_at_k(np.asarray(ids), true_np), 4),
+                "eval_reduction": round(
+                    speedup_model(n_db, np.asarray(n_evals)), 2),
+                "spec_fingerprint": spec.replace(ef_search=ef).fingerprint(),
+            }
+            rows.append(row)
+        shown = [r for r in rows if r["alpha"] == alpha]
+        best = max(shown, key=lambda r: (r["recall@10"], r["eval_reduction"]))
+        print(f"[spec] blend({alpha:4.2f}): best recall={best['recall@10']:.4f} "
+              f"at ef={best['ef']} (evals cut {best['eval_reduction']:.1f}x)")
+
+    result = {
+        "workload": {"distance": "kl", "n_db": n_db, "n_queries": n_q,
+                     "dim": dim, "k": K, "NN": NN, "ef_construction": EF_C,
+                     "wave": WAVE, "search_frontier": 1,
+                     "backend": jax.default_backend()},
+        "spec": base.to_dict(),
+        "spec_fingerprint": base.fingerprint(),
+        "blend_sweep": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == "__main__":
+    run_spec()

@@ -63,14 +63,25 @@ SCHEMAS = {
     # throughput-gated (p99 speedup of the slot scheduler over static
     # batching, adaptive-frontier eval reduction) — absolute latencies vary
     # by runner class, ratios and recalls must not.  calibration=None: the
-    # gated metrics need no machine-speed rescaling.
+    # gated metrics need no machine-speed rescaling.  "dynamic" is the
+    # dispatch-on-idle baseline (recall-gated; its p99 ratio lives in slo).
     "serve": {
         "calibration": None,
         "sections": {
             "static": ((), None),
+            "dynamic": ((), None),
             "continuous": ((), None),
             "adaptive": ((), "eval_reduction_pct"),
             "slo": ((), "p99_speedup"),
+        },
+    },
+    # RetrievalSpec Blend(alpha) construction-distance sweep: recall@10 per
+    # (alpha, ef) point plus the distance-evaluation reduction — both
+    # machine-independent, so no calibration and no absolute-throughput gate.
+    "spec": {
+        "calibration": None,
+        "sections": {
+            "blend_sweep": (("alpha", "ef"), "eval_reduction"),
         },
     },
 }

@@ -28,7 +28,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import ANNIndex, get_distance, knn_scan, recall_at_k
+from repro.core import ANNIndex, RetrievalSpec, get_distance, knn_scan, recall_at_k
 from repro.core.metrics import speedup_model
 
 from .datasets import COMBOS, load
@@ -71,21 +71,24 @@ def run(n_db: int = 8000, n_q: int = 100, out_dir: str = "artifacts/bench",
                         ("reverse", "none"), ("natural", "natural")]
 
         for index_sym, query_sym in variants:
+            spec = RetrievalSpec(
+                distance=dist_name, build_policy=index_sym,
+                search_policy=query_sym, builder=builder, NN=15,
+                ef_construction=100, nnd_iters=4 if quick else 8,
+                engine=engine, frontier=frontier, k=K,
+            )
             try:
-                idx = ANNIndex.build(
-                    X, dist, index_sym=index_sym, query_sym=query_sym,
-                    builder=builder, NN=15, ef_construction=100,
-                    nnd_iters=4 if quick else 8,
-                    key=jax.random.PRNGKey(7), natural=natural,
-                )
+                idx = ANNIndex.build(X, dist, spec=spec,
+                                     key=jax.random.PRNGKey(7), natural=natural)
             except Exception as e:  # noqa: BLE001 (record & continue)
                 print(f"[fig12] {name}-{dim} {dist_name} {index_sym}-{query_sym}"
                       f" BUILD FAILED: {e}")
                 continue
             frontier_pts = []
             for ef in efs:
-                search = idx.searcher(K, ef, k_c=ef if query_sym != "none" else None,
-                                      engine=engine, frontier=frontier)
+                ef_spec = spec.replace(
+                    ef_search=ef, k_c=ef if query_sym != "none" else None)
+                search = idx.searcher(spec=ef_spec)
                 d, ids, n_evals, hops = search(Q)
                 jax.block_until_ready(d)
                 t0 = time.time()
@@ -107,6 +110,8 @@ def run(n_db: int = 8000, n_q: int = 100, out_dir: str = "artifacts/bench",
                 "dataset": f"{name}-{dim}", "distance": dist_name,
                 "index_sym": index_sym, "query_sym": query_sym,
                 "builder": builder, "engine": engine, "n_db": n_db,
+                "spec": spec.to_dict(),
+                "spec_fingerprint": spec.fingerprint(),
                 "frontier": frontier_pts,
             })
 

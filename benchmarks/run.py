@@ -18,7 +18,7 @@ def main():
                     help="reduced combos/sizes (CI mode)")
     ap.add_argument("--only", default=None,
                     choices=[None, "table3", "fig12", "kernels", "engine",
-                             "build", "online", "serve"])
+                             "build", "online", "serve", "spec"])
     ap.add_argument("--n-db", type=int, default=None)
     ap.add_argument("--n-q", type=int, default=None)
     args = ap.parse_args()
@@ -56,6 +56,12 @@ def main():
         from . import bench_serve
 
         bench_serve.run_serve(quick=args.quick)
+
+    if args.only in (None, "spec"):
+        print("\n=== spec: Blend(alpha) construction-distance sweep ===")
+        from . import bench_spec
+
+        bench_spec.run_spec(quick=args.quick)
 
     if args.only in (None, "table3"):
         print("\n=== Table 3: filter-and-refine symmetrization vs "

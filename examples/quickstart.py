@@ -10,7 +10,7 @@ and compares against brute force.
 import jax
 import numpy as np
 
-from repro.core import ANNIndex, get_distance, knn_scan, recall_at_k
+from repro.core import ANNIndex, RetrievalSpec, knn_scan, recall_at_k
 from repro.core.metrics import speedup_model
 from repro.data.synthetic import lda_like_histograms, split_queries
 
@@ -22,19 +22,21 @@ def main():
     data = lda_like_histograms(jax.random.PRNGKey(0), N_DB + N_QUERIES, DIM)
     queries, db = split_queries(data, N_QUERIES, jax.random.PRNGKey(1))
 
-    # 2. a NON-METRIC, NON-SYMMETRIC distance - no symmetrization anywhere
-    dist = get_distance("kl")
+    # 2. the whole scenario as one declarative, JSON-round-trippable spec:
+    #    a NON-METRIC, NON-SYMMETRIC distance, no symmetrization anywhere
+    #    (builder="swgraph" gives the paper's incremental insertion)
+    spec = RetrievalSpec(distance="kl", builder="nndescent", NN=15,
+                         k=K, ef_search=96)
+    dist = spec.base_distance()
 
     # 3. exact ground truth (left queries: d(x, q), data point first)
     _, true_ids = knn_scan(dist, queries, db, K)
 
-    # 4. build the neighborhood graph (TPU-native NN-descent builder;
-    #    builder="swgraph" gives the paper's sequential insertion)
-    index = ANNIndex.build(db, dist, builder="nndescent", NN=15,
-                           key=jax.random.PRNGKey(2))
+    # 4. build the neighborhood graph (TPU-native NN-descent builder)
+    index = ANNIndex.build(db, spec=spec, key=jax.random.PRNGKey(2))
 
     # 5. search with the ORIGINAL distance guiding the beam
-    dists, ids, n_evals, hops = index.search(queries, k=K, ef_search=96)
+    dists, ids, n_evals, hops = index.searcher()(queries)
 
     recall = recall_at_k(np.asarray(ids), np.asarray(true_ids))
     speedup = speedup_model(N_DB, np.asarray(n_evals))

@@ -10,6 +10,7 @@ frontier (the Figs 1-2 axes).
 
 import argparse
 
+from repro.core import RetrievalSpec
 from repro.launch.serve import build_and_serve
 
 
@@ -22,19 +23,19 @@ def main():
     args = ap.parse_args()
 
     print(f"== serving {args.distance} over n={args.n_db} d={args.dim} ==")
+    base = RetrievalSpec(distance=args.distance, ef_search=96, frontier=4,
+                         wave=64)
     rows = []
-    for index_sym in ("none", "min", "reverse", "l2"):
-        stats = build_and_serve(
-            distance=args.distance, n_db=args.n_db, dim=args.dim,
-            n_queries=256, batch=64, ef_search=96, index_sym=index_sym,
-        )
-        rows.append((index_sym, stats))
+    for spec in base.grid(build_policy=["none", "min", "reverse", "l2"]):
+        stats = build_and_serve(spec=spec, n_db=args.n_db, dim=args.dim,
+                                n_queries=256, batch=64)
+        rows.append((str(spec.build_policy), stats))
 
-    print("\nindex-time symmetrization frontier (query-time = original):")
-    print(f"{'index_sym':>10} {'recall@10':>10} {'evals cut':>10} "
+    print("\nconstruction-policy frontier (query-time = original):")
+    print(f"{'build_policy':>12} {'recall@10':>10} {'evals cut':>10} "
           f"{'p50 ms':>8} {'p99 ms':>8}")
     for sym, s in rows:
-        print(f"{sym:>10} {s['recall@k']:>10.3f} {s['eval_reduction']:>9.1f}x "
+        print(f"{sym:>12} {s['recall@k']:>10.3f} {s['eval_reduction']:>9.1f}x "
               f"{s['p50_latency_ms']:>8.2f} {s['p99_latency_ms']:>8.2f}")
 
 

@@ -1,0 +1,48 @@
+"""Sweep the paper's open research line with RetrievalSpec.grid.
+
+Builds one index per Blend(alpha) graph-construction distance — the
+parametric combinator interpolating reverse (a=0), avg (a=0.5) and the
+original distance (a=1) — and searches every one of them under the
+ORIGINAL KL divergence, printing the recall / distance-eval frontier.
+Specs round-trip through JSON, so any point of the sweep can be handed to
+`python -m repro.launch.serve --spec point.json` verbatim.
+
+    PYTHONPATH=src python examples/spec_sweep.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import ANNIndex, Blend, RetrievalSpec, knn_scan, recall_at_k
+from repro.core.metrics import speedup_model
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+N_DB, N_QUERIES, DIM, K = 4_000, 64, 32, 10
+
+
+def main():
+    data = lda_like_histograms(jax.random.PRNGKey(0), N_DB + N_QUERIES, DIM)
+    queries, db = split_queries(data, N_QUERIES, jax.random.PRNGKey(1))
+
+    base = RetrievalSpec(distance="kl", builder="swgraph", build_engine="wave",
+                         wave=64, NN=15, ef_construction=100, k=K,
+                         ef_search=96, frontier=1)
+    dist = base.base_distance()
+    _, true_ids = knn_scan(dist, queries, db, K)
+
+    print(f"{'build_policy':>14} {'recall@10':>10} {'evals cut':>10}")
+    for spec in base.grid(build_policy=[Blend(a) for a in
+                                        (0.0, 0.25, 0.5, 0.75, 1.0)]):
+        idx = ANNIndex.build(db, spec=spec, key=jax.random.PRNGKey(2))
+        _, ids, n_evals, _ = idx.searcher(spec=spec)(queries)
+        r = recall_at_k(np.asarray(ids), np.asarray(true_ids))
+        cut = speedup_model(N_DB, np.asarray(n_evals))
+        print(f"{str(spec.build_policy):>14} {r:>10.4f} {cut:>9.1f}x")
+
+    # any sweep point is a serveable artifact
+    print("\none sweep point as serve-ready JSON:")
+    print(base.replace(build_policy=Blend(0.25)).to_json())
+
+
+if __name__ == "__main__":
+    main()

@@ -13,10 +13,18 @@ from .distances import (
 )
 from .symmetrize import (
     SYM_MODES,
+    CombinedDistance,
     ReversedDistance,
     SymmetrizedDistance,
     ViewedDistance,
     symmetrized,
+)
+from .spec import (
+    Blend,
+    DistancePolicy,
+    MaxSym,
+    RankBlend,
+    RetrievalSpec,
 )
 from .brute_force import ground_truth, knn_scan
 from .beam_search import beam_search_impl, make_batched_searcher

@@ -277,6 +277,31 @@ def frontier_compact_width(T: int, M: int, compact: int) -> int:
     return min(T * M, max(M, compact))
 
 
+def adaptive_width_update(core: BatchBeamState, t_cur, stall, worst, T: int,
+                          patience: int):
+    """One step of the per-query adaptive-frontier policy (PR 4).
+
+    The beam radius (worst member) is the pruning threshold: while it is
+    still shrinking — or the beam has not even filled (greedy-descent
+    phase, radius +inf) — expansion ORDER matters and top-T overspends
+    evaluations, so the query expands sequentially (width 1); once it
+    stalls for ``patience`` steps the evaluation set is fixed and the
+    width doubles per step back up to ``T`` to drain the beam in fat
+    steps.  Shared verbatim by the slot scheduler's host tick loop and
+    the offline ``batched_beam_search`` while_loop, so a closed-batch
+    adaptive run is bit-identical to the all-at-once scheduler run.
+    """
+    radius = core.beam_d[:, -1]
+    improved = (radius < worst) | ~jnp.isfinite(radius)
+    stall = jnp.where(improved, 0, stall + 1)
+    t_cur = jnp.where(
+        improved,
+        1,
+        jnp.where(stall >= patience, jnp.minimum(t_cur * 2, T), t_cur),
+    )
+    return t_cur, stall, radius
+
+
 def batched_beam_search(
     neighbors,  # (n, M) int32 adjacency, -1 padding
     score_rows,  # (B, R) int32 ids -> (B, R) f32 left-query distances
@@ -288,6 +313,8 @@ def batched_beam_search(
     compact: int = 32,
     n_active=None,  # optional () i32: only nodes < n_active are searchable
     alive=None,  # optional (n,) bool: tombstoned nodes are never scored
+    adaptive: bool = False,  # per-query adaptive frontier width (PR 4 policy)
+    patience: int = 1,  # stalled steps before the adaptive width regrows
 ):
     """Run B queries to convergence in lock-step.  Returns BatchBeamState.
 
@@ -310,6 +337,13 @@ def batched_beam_search(
     Seed and step are exposed separately (``seed_beams`` / ``beam_step``)
     so ``repro.core.scheduler`` can run the identical state machine with
     slot retire/refill between steps.
+
+    ``adaptive=True`` carries the PR-4 per-query frontier width ``t_cur``
+    (plus its stall counter and radius watermark) in the while_loop state:
+    closed-batch runs get the same sequential-while-improving /
+    fat-drain-once-stalled evaluation policy the slot scheduler applies
+    per slot, with ``adaptive=False`` leaving the loop state — and hence
+    the existing parity suites — untouched.
     """
     n, M = neighbors.shape
     if frontier < 1:
@@ -320,13 +354,37 @@ def batched_beam_search(
     state = seed_beams(score_rows, entries, B, ef, n, n_active=n_active, alive=alive)
     C = frontier_compact_width(T, M, compact)
 
-    def cond(st: BatchBeamState):
-        return jnp.any(~st.done)
+    if not adaptive:
 
-    def body(st: BatchBeamState):
-        return beam_step(st, neighbors, score_rows, ef, T, C, max_steps)
+        def cond(st: BatchBeamState):
+            return jnp.any(~st.done)
 
-    return jax.lax.while_loop(cond, body, state)
+        def body(st: BatchBeamState):
+            return beam_step(st, neighbors, score_rows, ef, T, C, max_steps)
+
+        return jax.lax.while_loop(cond, body, state)
+
+    # adaptive: every query starts in the width-1 fill/descent phase, exactly
+    # like a freshly admitted scheduler slot
+    ext0 = (
+        state,
+        jnp.ones((B,), jnp.int32),  # t_cur
+        jnp.zeros((B,), jnp.int32),  # stall
+        jnp.full((B,), INF, jnp.float32),  # worst (radius watermark)
+    )
+
+    def cond_a(carry):
+        return jnp.any(~carry[0].done)
+
+    def body_a(carry):
+        st, t_cur, stall, worst = carry
+        st = beam_step(st, neighbors, score_rows, ef, T, C, max_steps,
+                       t_active=t_cur)
+        t_cur, stall, worst = adaptive_width_update(st, t_cur, stall, worst, T,
+                                                    patience)
+        return st, t_cur, stall, worst
+
+    return jax.lax.while_loop(cond_a, body_a, ext0)[0]
 
 
 def _bitonic_merge(beam, kept, ef: int):
@@ -396,11 +454,15 @@ def make_step_searcher(
     compact: int = 32,
     max_steps: int | None = None,
     use_pallas=None,
+    adaptive: bool = False,
+    patience: int = 1,
 ):
     """Jitted batched searcher over the step-synchronized engine.
 
     Returns ``search(Q) -> (dists (B,k), ids (B,k), n_evals (B,), hops (B,))``
-    — the same contract as ``make_batched_searcher``.
+    — the same contract as ``make_batched_searcher``.  ``adaptive=True``
+    runs the per-query adaptive frontier policy inside the while_loop
+    (``frontier`` becomes the maximum width).
 
     ``use_pallas``: None routes scoring through the fused Pallas
     gather+distance kernel on TPU and the jnp einsum path elsewhere; True
@@ -443,6 +505,7 @@ def make_step_searcher(
         st = batched_beam_search(
             neighbors, score_rows, entries, B, ef,
             max_steps=max_steps, frontier=frontier, compact=compact,
+            adaptive=adaptive, patience=patience,
         )
         return st.beam_d[:, :k], st.beam_i[:, :k], st.n_evals, st.hops
 

@@ -1,32 +1,35 @@
 """High-level ANN index API: the paper's SW-graph scenarios as one object.
 
-Scenario knobs (paper SS3, second experimental series):
+Since ISSUE 5 the scenario currency is a ``RetrievalSpec``
+(``repro.core.spec``): one frozen, JSON-round-trippable object carrying the
+base distance (registry name), the graph-construction distance policy, the
+search-guidance policy + rerank ``k_c``, the builder/engine knobs and the
+scheduler knobs.  ``build``/``searcher``/``scheduler`` all consume specs:
 
-  index_sym  in {none, avg, min, reverse, l2, natural}  - distance used to
-              CONSTRUCT the neighborhood graph ("a-" marker in Figs 1-2).
-  query_sym  in {none, avg, min, natural}               - distance used to
-              GUIDE the beam search ("-b" marker).  "none" searches with the
-              original non-symmetric distance (the paper's key capability);
-              anything else is the full-symmetrization scenario and the beam
-              produces k_c candidates that are re-ranked under the original
-              distance.
+    spec = RetrievalSpec(distance="kl", build_policy=Blend(0.25),
+                         builder="swgraph", ef_search=96)
+    idx = ANNIndex.build(X, spec=spec)
+    search = idx.searcher(spec=spec)       # or idx.searcher() — the index
+    sched = idx.scheduler(spec=spec)       # remembers its spec
 
-Builders: "swgraph" (incremental insertion) or "nndescent" (TPU-parallel
-refinement) - DESIGN.md SS2.3.  SW-graph insertion itself runs through a
-construction engine knob mirroring the search-side ``engine``/``frontier``
-knobs: ``build_engine="wave"`` (default) inserts points in batches of
-``wave`` through the lock-step batched beam engine (NMSLIB-style relaxed
-ordering, bit-identical to sequential at wave=1), ``build_engine="sequential"``
-keeps the reference one-point-per-step builder.
+The historical kwargs (``index_sym``/``query_sym`` strings + loose knobs)
+still work through a thin shim that constructs the equivalent spec —
+bit-identical results, with a ``DeprecationWarning`` on the two string
+knobs.  ``search_policy != none`` is the paper's full-symmetrization
+scenario: the beam runs under the bound search policy and ``k_c``
+candidates are re-ranked under the original distance — by the batch
+searcher AND by the slot scheduler at retire time.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .batched_beam import make_step_searcher, select_entries
 from .beam_search import make_batched_searcher
@@ -34,8 +37,38 @@ from .build_engine import build_swgraph_wave
 from .filter_refine import rerank
 from .nndescent import build_nndescent
 from .online import OnlineIndex
+from .spec import RetrievalSpec
 from .swgraph import build_swgraph
-from .symmetrize import symmetrized
+
+
+def _legacy_spec(index_sym, query_sym, builder, build_engine, wave,
+                 build_frontier, NN, ef_construction, M_max, nnd_iters,
+                 n_entries, capacity) -> RetrievalSpec:
+    """Deprecation shim: the old loose kwargs, folded into one spec.  Only
+    explicitly-passed kwargs are forwarded, so the spec's own field defaults
+    apply exactly once (no duplicated default table to drift)."""
+    if index_sym is not None or query_sym is not None:
+        warnings.warn(
+            "index_sym/query_sym string kwargs are deprecated; pass a "
+            "RetrievalSpec (spec=...) with build_policy/search_policy instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    passed = {
+        "build_policy": index_sym,
+        "search_policy": query_sym,
+        "builder": builder,
+        "build_engine": build_engine,
+        "wave": wave,
+        "build_frontier": build_frontier,
+        "NN": NN,
+        "ef_construction": ef_construction,
+        "M_max": M_max,
+        "nnd_iters": nnd_iters,
+        "n_entries": n_entries,
+        "capacity": capacity,
+    }
+    return RetrievalSpec(**{k: v for k, v in passed.items() if v is not None})
 
 
 @dataclasses.dataclass
@@ -58,6 +91,7 @@ class ANNIndex:
     build_dist: object = None  # index-time distance (defaults to dist)
     capacity: Optional[int] = None  # mutable-index slot budget
     online: Optional[OnlineIndex] = None  # created lazily on first mutation
+    spec: RetrievalSpec = dataclasses.field(default_factory=RetrievalSpec)
 
     @property
     def entry(self) -> int:
@@ -70,88 +104,113 @@ class ANNIndex:
     def build(
         cls,
         X,
-        dist,
+        dist=None,
         *,
-        index_sym: str = "none",
-        query_sym: str = "none",
-        builder: str = "nndescent",
-        build_engine: str = "wave",
-        wave: int = 32,
+        spec: Optional[RetrievalSpec] = None,
+        index_sym: Optional[str] = None,
+        query_sym: Optional[str] = None,
+        builder: Optional[str] = None,
+        build_engine: Optional[str] = None,
+        wave: Optional[int] = None,
         build_frontier: Optional[int] = None,
-        NN: int = 15,
-        ef_construction: int = 100,
+        NN: Optional[int] = None,
+        ef_construction: Optional[int] = None,
         M_max: Optional[int] = None,
-        nnd_iters: int = 8,
-        n_entries: int = 4,
+        nnd_iters: Optional[int] = None,
+        n_entries: Optional[int] = None,
         capacity: Optional[int] = None,
         key=None,
         natural: Optional[Callable] = None,
     ) -> "ANNIndex":
-        """``build_engine``/``wave`` control HOW the swgraph builder inserts:
+        """Build an index from a ``RetrievalSpec`` (the preferred path) or
+        from the legacy kwargs (folded into an equivalent spec by the
+        deprecation shim — bit-identical results).
 
-        "wave" runs construction beam searches in batches of ``wave`` points
-        through the step-synchronized engine against the frozen prefix graph
-        (``build_frontier`` candidates expanded per lock-step, defaulting
-        like the wave builder); "sequential" is the one-point-per-step
-        reference builder the wave path is parity-tested against.
+        ``dist`` may be passed explicitly (e.g. a ``ViewedDistance`` whose
+        role-dependent views the registry cannot name); otherwise it is
+        resolved from ``spec.distance``.  ``natural`` — optional callable
+        returning the distance-specific natural symmetrization (Eq. 4).
 
-        ``capacity``: total slot budget for online mutation (inserted points
-        consume slots; tombstones never release them).  Setting it makes the
-        index mutable immediately; otherwise the first ``insert``/``delete``
-        call converts it lazily with a default budget of ``2 * n``.
+        ``spec.capacity``: total slot budget for online mutation (inserted
+        points consume slots).  Setting it makes the index mutable
+        immediately; otherwise the first ``insert``/``delete`` call
+        converts it lazily with a default budget of ``2 * n``.
         """
-        build_dist = symmetrized(dist, index_sym, natural=natural)
-        search_dist = symmetrized(dist, query_sym, natural=natural) if query_sym != "none" else dist
+        if spec is None:
+            spec = _legacy_spec(index_sym, query_sym, builder, build_engine,
+                                wave, build_frontier, NN, ef_construction,
+                                M_max, nnd_iters, n_entries, capacity)
+            if dist is not None and getattr(dist, "name", None):
+                # record the REAL distance so build_info / bench artifacts /
+                # fingerprints self-describe the scenario actually run (for
+                # registry distances the name round-trips through
+                # get_distance; view-wrapped ones record their true name)
+                spec = spec.replace(distance=dist.name)
+        elif any(v is not None for v in (index_sym, query_sym, builder,
+                                         build_engine, wave, build_frontier,
+                                         NN, ef_construction, M_max, nnd_iters,
+                                         n_entries, capacity)):
+            raise ValueError(
+                "pass EITHER spec=... or the legacy kwargs, not both "
+                "(use spec.replace(...) to tweak a spec)"
+            )
+        if dist is None:
+            dist = spec.base_distance()
 
-        if builder == "swgraph":
-            if build_engine == "wave":
+        build_dist = spec.bind_build(dist, natural=natural)
+        search_dist = (spec.bind_search(dist, natural=natural)
+                       if spec.needs_rerank else dist)
+
+        if spec.builder == "swgraph":
+            if spec.build_engine == "wave":
                 neighbors, degrees = build_swgraph_wave(
-                    build_dist, X, NN=NN, ef_construction=ef_construction,
-                    M_max=M_max, wave=wave, frontier=build_frontier,
-                )
-            elif build_engine == "sequential":
-                neighbors, degrees = build_swgraph(
-                    build_dist, X, NN=NN, ef_construction=ef_construction, M_max=M_max
+                    build_dist, X, NN=spec.NN,
+                    ef_construction=spec.ef_construction,
+                    M_max=spec.M_max, wave=spec.wave,
+                    frontier=spec.build_frontier,
                 )
             else:
-                raise ValueError(
-                    f"unknown build_engine {build_engine!r}; known: wave, sequential"
+                neighbors, degrees = build_swgraph(
+                    build_dist, X, NN=spec.NN,
+                    ef_construction=spec.ef_construction, M_max=spec.M_max,
                 )
-        elif builder == "nndescent":
+        else:
             key = key if key is not None else jax.random.PRNGKey(0)
             neighbors, degrees = build_nndescent(
-                build_dist, X, key, K=NN, iters=nnd_iters, M_out=M_max
+                build_dist, X, key, K=spec.NN, iters=spec.nnd_iters,
+                M_out=spec.M_max,
             )
-        else:
-            raise ValueError(f"unknown builder {builder!r}")
 
         entries = select_entries(
-            search_dist, X, n_entries=n_entries,
+            search_dist, X, n_entries=spec.n_entries,
             key=jax.random.fold_in(key, 0xE) if key is not None else None,
         )
 
         info = dict(
-            builder=builder,
-            build_engine=build_engine if builder == "swgraph" else "nndescent",
-            wave=wave if (builder, build_engine) == ("swgraph", "wave") else None,
-            index_sym=index_sym,
-            query_sym=query_sym,
-            NN=NN,
-            ef_construction=ef_construction,
+            builder=spec.builder,
+            build_engine=spec.build_engine if spec.builder == "swgraph" else "nndescent",
+            wave=spec.wave if (spec.builder, spec.build_engine) == ("swgraph", "wave") else None,
+            index_sym=str(spec.build_policy),
+            query_sym=str(spec.search_policy),
+            NN=spec.NN,
+            ef_construction=spec.ef_construction,
             mean_degree=float(jnp.mean(degrees.astype(jnp.float32))),
+            spec=spec.to_dict(),
+            spec_fingerprint=spec.fingerprint(),
         )
         idx = cls(
             X=X,
             neighbors=neighbors,
             dist=dist,
             search_dist=search_dist,
-            query_sym=query_sym,
+            query_sym=str(spec.search_policy),
             entries=entries,
             build_info=info,
             build_dist=build_dist,
-            capacity=capacity,
+            capacity=spec.capacity,
+            spec=spec,
         )
-        if capacity is not None:
+        if spec.capacity is not None:
             idx.ensure_online()
         return idx
 
@@ -167,6 +226,7 @@ class ANNIndex:
                 NN=self.build_info.get("NN") or self.neighbors.shape[1] // 2,
                 ef_construction=self.build_info.get("ef_construction") or 100,
                 wave=self.build_info.get("wave") or 32,
+                spec=self.spec,
             )
             self.capacity = self.online.capacity
         return self.online
@@ -204,42 +264,81 @@ class ANNIndex:
 
     # ----------------------------------------------------------------- search
 
-    def _make_searcher(self, dist, ef: int, k: int, engine: str, frontier: int):
+    def _make_searcher(self, dist, ef: int, k: int, engine: str, frontier: int,
+                       adaptive: bool = False, patience: int = 1):
         if self.online is not None:
             if engine != "batched":
                 raise ValueError(
                     f"engine {engine!r} does not support the online mutable "
                     f"index; use engine='batched'"
                 )
-            return self.online.searcher(k, ef, frontier=frontier)
+            return self.online.searcher(k, ef, frontier=frontier,
+                                        adaptive=adaptive, patience=patience)
         if engine == "batched":
             return make_step_searcher(dist, self.neighbors, self.X, ef, k,
-                                      entries=self.entries, frontier=frontier)
+                                      entries=self.entries, frontier=frontier,
+                                      adaptive=adaptive, patience=patience)
         if engine == "reference":
+            if adaptive:
+                raise ValueError("adaptive frontier requires engine='batched'")
             return make_batched_searcher(dist, self.neighbors, self.X, ef, k,
                                          entry=self.entry)
         raise ValueError(f"unknown engine {engine!r}; known: batched, reference")
 
-    def searcher(self, k: int, ef_search: int, k_c: Optional[int] = None,
-                 engine: str = "batched", frontier: int = 2):
+    def _check_search_policy(self, spec: Optional[RetrievalSpec]):
+        """The search distance is BOUND at build time; a spec passed later
+        can tune knobs but cannot silently switch the scenario — a
+        mismatched search_policy would serve the wrong distance without
+        any error, so fail loud and point at a rebuild instead."""
+        if spec is not None and str(spec.search_policy) != self.query_sym:
+            raise ValueError(
+                f"spec.search_policy {str(spec.search_policy)!r} does not "
+                f"match this index's bound search policy {self.query_sym!r}; "
+                f"rebuild with ANNIndex.build(X, spec=spec) to change the "
+                f"search scenario"
+            )
+
+    def searcher(self, k: Optional[int] = None, ef_search: Optional[int] = None,
+                 k_c: Optional[int] = None, engine: Optional[str] = None,
+                 frontier: Optional[int] = None, *,
+                 adaptive: Optional[bool] = None,
+                 patience: Optional[int] = None,
+                 spec: Optional[RetrievalSpec] = None):
         """Return a jitted ``search(Q) -> (dists, ids, n_evals, hops)``.
 
-        ``engine="batched"`` (default) runs the step-synchronized batched
-        beam engine with multi-entry seeding and ``frontier`` candidates
-        expanded per lock-step; ``engine="reference"`` keeps the vmapped
-        per-query while_loop that parity tests compare against.
+        Knobs resolve spec-first: explicit arguments override ``spec``
+        (default: the spec the index was built with).  ``engine="batched"``
+        runs the step-synchronized batched beam engine with multi-entry
+        seeding and ``frontier`` candidates expanded per lock-step;
+        ``adaptive=True`` gives every query the per-query adaptive frontier
+        width inside the while_loop (the PR-4 policy, offline);
+        ``engine="reference"`` keeps the vmapped per-query while_loop that
+        parity tests compare against.
 
-        Full-symmetrization scenario (query_sym != none): the beam runs under
-        the symmetrized distance with ef >= k_c, producing k_c candidates
-        re-ranked under the original distance (counted into n_evals).
+        Full-symmetrization scenario (``search_policy != none``): the beam
+        runs under the bound search policy with ef >= k_c, producing k_c
+        candidates re-ranked under the original distance (counted into
+        n_evals).
         """
+        self._check_search_policy(spec)
+        spec = spec if spec is not None else self.spec
+        k = spec.k if k is None else k
+        ef_search = spec.ef_search if ef_search is None else ef_search
+        k_c = spec.k_c if k_c is None else k_c
+        engine = spec.engine if engine is None else engine
+        frontier = spec.frontier if frontier is None else frontier
+        adaptive = spec.adaptive if adaptive is None else adaptive
+        patience = spec.patience if patience is None else patience
+
         if self.query_sym == "none":
             ef = max(ef_search, k)
-            return self._make_searcher(self.dist, ef, k, engine, frontier)
+            return self._make_searcher(self.dist, ef, k, engine, frontier,
+                                       adaptive, patience)
 
         k_c = k_c or max(ef_search, k)
         ef = max(ef_search, k_c)
-        inner = self._make_searcher(self.search_dist, ef, k_c, engine, frontier)
+        inner = self._make_searcher(self.search_dist, ef, k_c, engine, frontier,
+                                    adaptive, patience)
 
         if self.online is not None:
             # not jitted as a whole: the inner searcher must re-read the
@@ -261,42 +360,75 @@ class ANNIndex:
 
         return search
 
-    def search(self, Q, k: int = 10, ef_search: int = 64, k_c: Optional[int] = None,
-               engine: str = "batched", frontier: int = 2):
+    def search(self, Q, k: Optional[int] = None, ef_search: Optional[int] = None,
+               k_c: Optional[int] = None, engine: Optional[str] = None,
+               frontier: Optional[int] = None):
+        """One-shot ``searcher(...)(Q)`` — identical knob resolution (explicit
+        args override the index's spec), so the two entry points can never
+        silently serve different scenarios."""
         return self.searcher(k, ef_search, k_c, engine=engine, frontier=frontier)(Q)
 
     # -------------------------------------------------------------- serving
 
-    def scheduler(self, k: int, ef_search: int, *, slots: int = 32,
-                  frontier: int = 4, adaptive: bool = False, patience: int = 1,
-                  steps_per_sync: int = 1, compact: int = 32, use_pallas=None):
+    def scheduler(self, k: Optional[int] = None, ef_search: Optional[int] = None,
+                  *, slots: Optional[int] = None, frontier: Optional[int] = None,
+                  adaptive: Optional[bool] = None, patience: Optional[int] = None,
+                  steps_per_sync: Optional[int] = None,
+                  compact: Optional[int] = None, k_c: Optional[int] = None,
+                  use_pallas=None, spec: Optional[RetrievalSpec] = None):
         """Continuous-batching slot scheduler over this index.
 
         Returns a ``repro.core.scheduler.SlotScheduler``: ``slots``
         concurrent queries advance in lock-step, each retiring the moment
         it converges and handing its slot to the next pending request —
         the serving-side answer to straggler queries that the all-at-once
-        ``searcher`` batch must wait for.  ``adaptive=True`` additionally
-        gives every slot its own frontier width (sequential-order
-        expansion while its beam radius improves, fat drain steps once it
-        stalls for ``patience`` steps), recovering the paper's
-        distance-evaluation counts at batched throughput.
+        ``searcher`` batch must wait for.  Knobs resolve spec-first
+        (``frontier`` defaults to ``spec.sched_frontier`` — the slot
+        engine prefers a fatter frontier than the dispatch-batched
+        engine).  ``adaptive=True`` additionally gives every slot its own
+        frontier width, recovering the paper's distance-evaluation counts
+        at batched throughput.
 
         On a mutable index the scheduler reads the live graph every tick:
         inserts/deletes/compaction interleave with in-flight queries, and
         results are re-masked against the current ``alive`` set at retire
-        time.  Requires ``query_sym == "none"`` (the paper's direct
-        non-metric search); the symmetrized-beam rerank scenario still
-        serves through ``searcher()``.
+        time.  A rerank spec (``search_policy != none``) is served too:
+        the beams run under the bound search policy and each retired
+        request's ``k_c`` candidates are re-ranked under the original
+        distance — results identical to ``searcher()`` on the same spec.
         """
         from .scheduler import GraphView, SlotScheduler
 
+        self._check_search_policy(spec)
+        spec = spec if spec is not None else self.spec
+        k = spec.k if k is None else k
+        ef_search = spec.ef_search if ef_search is None else ef_search
+        slots = spec.slots if slots is None else slots
+        frontier = spec.sched_frontier if frontier is None else frontier
+        adaptive = spec.adaptive if adaptive is None else adaptive
+        patience = spec.patience if patience is None else patience
+        steps_per_sync = spec.steps_per_sync if steps_per_sync is None else steps_per_sync
+        compact = spec.compact if compact is None else compact
+
+        rerank_fn = None
         if self.query_sym != "none":
-            raise ValueError(
-                "the slot scheduler serves query_sym='none'; the "
-                "symmetrized-beam rerank path goes through searcher()"
-            )
-        ef = max(ef_search, k)
+            k_c = k_c or spec.k_c or max(ef_search, k)
+            ef = max(ef_search, k_c)
+            beam_dist = self.search_dist
+            orig, k_final = self.dist, k
+            online = self.online
+
+            def rerank_fn(q, cand):
+                X_now = online.X if online is not None else self.X
+                d, ids = rerank(orig, jnp.asarray(q)[None],
+                                X_now, jnp.asarray(cand, jnp.int32)[None],
+                                k_final)
+                return np.asarray(d[0]), np.asarray(ids[0], np.int64)
+        else:
+            k_c = None
+            ef = max(ef_search, k)
+            beam_dist = self.dist
+
         dim = int(self.X.shape[1])
         if self.online is not None:
             online = self.online
@@ -307,10 +439,11 @@ class ANNIndex:
                                  epoch=online.mutation_epoch,
                                  killed_epoch=online.killed_epoch)
         else:
+            consts = (self.search_dist if self.query_sym != "none"
+                      else self.dist).prep_scan(self.X)
             entries = (self.entries if self.entries is not None
                        else jnp.zeros((1,), jnp.int32))
-            view = GraphView(self.neighbors, self.dist.prep_scan(self.X),
-                             None, entries)
+            view = GraphView(self.neighbors, consts, None, entries)
 
             def graph_fn():
                 if self.online is not None:
@@ -327,8 +460,8 @@ class ANNIndex:
                 return view
 
         return SlotScheduler(
-            self.dist, graph_fn, dim=dim, slots=slots, ef=ef, k=k,
+            beam_dist, graph_fn, dim=dim, slots=slots, ef=ef, k=k,
             frontier=frontier, adaptive=adaptive, patience=patience,
             steps_per_sync=steps_per_sync, compact=compact,
-            use_pallas=use_pallas,
+            use_pallas=use_pallas, k_c=k_c, rerank_fn=rerank_fn,
         )

@@ -192,8 +192,11 @@ def _repair_wave(dist, adj, adj_d, consts, qc_all, alive, entries, pids, ok_pt,
     return reverse_edge_merge(adj, adj_d, flat_j, flat_i, d_rev, flat_ok, R)
 
 
-@functools.partial(jax.jit, static_argnames=("dist", "k", "ef", "T", "compact"))
-def _masked_search(dist, Q, consts, adj, alive, entries, k, ef, T, compact):
+@functools.partial(
+    jax.jit, static_argnames=("dist", "k", "ef", "T", "compact", "adaptive", "patience")
+)
+def _masked_search(dist, Q, consts, adj, alive, entries, k, ef, T, compact,
+                   adaptive=False, patience=1):
     """Alive-masked batched beam search over the capacity-padded graph."""
     B = Q.shape[0]
     qc = jax.vmap(dist.prep_query)(Q)
@@ -203,7 +206,8 @@ def _masked_search(dist, Q, consts, adj, alive, entries, k, ef, T, compact):
         return jax.vmap(dist.score)(rows, qc)
 
     st = batched_beam_search(adj, score_rows, entries, B, ef, frontier=T,
-                             compact=compact, alive=alive)
+                             compact=compact, alive=alive, adaptive=adaptive,
+                             patience=patience)
     return st.beam_d[:, :k], st.beam_i[:, :k], st.n_evals, st.hops
 
 
@@ -226,8 +230,11 @@ class OnlineIndex:
 
     def __init__(self, X, adj, adj_d, alive, n_total, build_dist, search_dist,
                  entries, *, NN, ef_construction=100, wave=32, frontier=4,
-                 rev_rounds=None, seed=0):
+                 rev_rounds=None, seed=0, spec=None):
         cap, M_max = adj.shape
+        # the RetrievalSpec this index serves (carried for self-description
+        # and so schedulers/serving layers can recover the full scenario)
+        self.spec = spec
         assert X.shape[0] == cap and alive.shape == (cap,)
         self.build_dist = build_dist
         self.search_dist = search_dist if search_dist is not None else build_dist
@@ -262,7 +269,7 @@ class OnlineIndex:
     @classmethod
     def from_graph(cls, X, neighbors, build_dist, search_dist=None, *,
                    capacity=None, entries=None, NN=None, ef_construction=100,
-                   wave=32, frontier=4, rev_rounds=None, seed=0):
+                   wave=32, frontier=4, rev_rounds=None, seed=0, spec=None):
         """Wrap a built ``(X, neighbors)`` graph in a mutable index.
 
         ``capacity`` (default ``2 * n``) bounds the lifetime number of
@@ -285,7 +292,7 @@ class OnlineIndex:
             X_pad, adj, jnp.full((cap, M_max), INF, jnp.float32), alive, n,
             build_dist, search_dist, entries, NN=NN if NN is not None else M_max // 2,
             ef_construction=ef_construction, wave=wave, frontier=frontier,
-            rev_rounds=rev_rounds, seed=seed,
+            rev_rounds=rev_rounds, seed=seed, spec=spec,
         )
         self.adj_d = _edge_distances(build_dist, self.adj, self.consts, self.qc_all)
         return self
@@ -449,13 +456,15 @@ class OnlineIndex:
             self._sconsts_cache = self.search_dist.prep_scan(self.X)
         return self._sconsts_cache
 
-    def searcher(self, k: int, ef_search: int, frontier: int = 2, compact: int = 32):
+    def searcher(self, k: int, ef_search: int, frontier: int = 2, compact: int = 32,
+                 adaptive: bool = False, patience: int = 1):
         """Batched alive-masked searcher: ``search(Q) -> (d, ids, evals, hops)``.
 
         The returned callable reads the CURRENT index state on every call —
         results always reflect the latest inserts and deletes.  Ids are
         stable slot ids; rows with fewer than k alive reachable points pad
-        with (-1, inf).
+        with (-1, inf).  ``adaptive=True`` runs the per-query adaptive
+        frontier policy inside the while_loop.
         """
         ef = max(ef_search, k)
         T = max(1, min(frontier, ef))
@@ -464,6 +473,7 @@ class OnlineIndex:
             return _masked_search(
                 self.search_dist, Q, self._search_consts(), self.adj, self.alive,
                 self.entries, k=k, ef=ef, T=T, compact=compact,
+                adaptive=adaptive, patience=patience,
             )
 
         return search

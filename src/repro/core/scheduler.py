@@ -54,6 +54,7 @@ import numpy as np
 
 from .batched_beam import (
     BatchBeamState,
+    adaptive_width_update,
     beam_step,
     frontier_compact_width,
     seed_beams,
@@ -125,17 +126,32 @@ class SlotScheduler:
         None routes single-matmul ``Distance`` scoring through the fused
         gather kernel wrapper (einsum off-TPU, Pallas on TPU), False forces
         the generic pytree path (the parity reference)
+    k_c, rerank_fn : the full-symmetrization rerank scenario (``RetrievalSpec``
+        with ``search_policy != none``): ``dist`` is the BOUND search policy
+        guiding the beam, and at retire time the slot's best ``k_c``
+        candidates are re-ranked under the ORIGINAL distance by
+        ``rerank_fn(q, cand_ids) -> (dists (k,), ids (k,))`` — a host
+        callback per retired request (fixed B=1 shape, so it compiles
+        once), counted into ``n_evals`` exactly like the batch searcher's
+        rerank path
     """
 
     def __init__(self, dist, graph_fn: Callable[[], GraphView], *, dim: int,
                  slots: int = 32, ef: int = 96, k: int = 10, frontier: int = 4,
                  compact: int = 32, adaptive: bool = False, patience: int = 1,
                  max_steps: Optional[int] = None, steps_per_sync: int = 1,
-                 use_pallas=None):
+                 use_pallas=None, k_c: Optional[int] = None,
+                 rerank_fn: Optional[Callable] = None):
         if ef < k:
             raise ValueError(f"ef {ef} < k {k}")
         if frontier < 1:
             raise ValueError(f"frontier must be >= 1, got {frontier}")
+        if (k_c is None) != (rerank_fn is None):
+            raise ValueError("k_c and rerank_fn must be provided together")
+        if k_c is not None and not (k <= k_c <= ef):
+            raise ValueError(f"need k {k} <= k_c {k_c} <= ef {ef}")
+        self.k_c = None if k_c is None else int(k_c)
+        self._rerank_fn = rerank_fn
         g = graph_fn()
         n, M = g.neighbors.shape
         self.dist = dist
@@ -216,23 +232,12 @@ class SlotScheduler:
                 core = beam_step(core, neighbors, score_rows, ef, T, C,
                                  max_steps, t_active=t_act)
                 if adaptive:
-                    # the beam radius (worst member) is the pruning
-                    # threshold: while it is still shrinking — or the beam
-                    # has not even filled (greedy-descent phase, radius
-                    # +inf) — expansion ORDER matters and top-T overspends
-                    # evaluations, so expand sequentially; once it stalls
-                    # for `patience` steps the evaluation set is fixed and
-                    # the width regrows to drain the beam in fat steps.
-                    radius = core.beam_d[:, -1]
-                    improved = (radius < worst) | ~jnp.isfinite(radius)
-                    stall = jnp.where(improved, 0, stall + 1)
-                    t_cur = jnp.where(
-                        improved,
-                        1,
-                        jnp.where(stall >= patience,
-                                  jnp.minimum(t_cur * 2, T), t_cur),
+                    # shared with the offline adaptive while_loop: expand
+                    # sequentially while the slot's beam radius improves,
+                    # drain fat once it stalls (see adaptive_width_update)
+                    t_cur, stall, worst = adaptive_width_update(
+                        core, t_cur, stall, worst, T, patience
                     )
-                    worst = radius
             return state._replace(core=core, t_cur=t_cur, stall=stall,
                                   worst=worst)
 
@@ -272,6 +277,8 @@ class SlotScheduler:
         )
         self._queue.clear()
         self._slot_rid = np.full((S,), -1, np.int64)
+        # raw per-slot query rows, kept host-side for the retire-time rerank
+        self._slot_q = np.zeros((S, self.dim), np.float32)
         # rid -> (arrival, admit time, admission epoch)
         self._meta: dict[int, tuple[float, float, int]] = {}
 
@@ -307,6 +314,7 @@ class SlotScheduler:
                 Q_new[s] = q
                 write[s] = True
                 self._slot_rid[s] = rid
+                self._slot_q[s] = q
                 self._meta[rid] = (t_arr, now, g.epoch)
             self.state = self._admit(
                 self.state, jnp.asarray(Q_new, self._dtype), jnp.asarray(write),
@@ -327,7 +335,7 @@ class SlotScheduler:
         # reads the FULL ef-wide beam so voided top-k entries backfill from
         # the alive candidates the search already ranked at k..ef.
         idx = np.flatnonzero(finished)
-        width = self.ef if self._masked else self.k
+        width = self.ef if self._masked else (self.k_c or self.k)
         d = np.asarray(self.state.core.beam_d[:, :width])[idx]
         ids = np.asarray(self.state.core.beam_i[:, :width]).astype(np.int64)[idx]
         evals = np.asarray(self.state.core.n_evals)[idx]
@@ -353,7 +361,20 @@ class SlotScheduler:
                                    kind="stable")
                 d = np.take_along_axis(d, order, axis=1)
                 ids = np.take_along_axis(ids, order, axis=1)
-        d, ids = d[:, : self.k], ids[:, : self.k]
+        if self.k_c is not None:
+            # full-symmetrization scenario: the beam ran under the bound
+            # search policy; re-rank its k_c best candidates under the
+            # ORIGINAL distance at retire time (one fixed-shape B=1 call
+            # per retired request, so serving never recompiles)
+            d, ids = d[:, : self.k_c], ids[:, : self.k_c]
+            rr_d = np.empty((len(idx), self.k), np.float32)
+            rr_i = np.empty((len(idx), self.k), np.int64)
+            for j, s in enumerate(idx):
+                rr_d[j], rr_i[j] = self._rerank_fn(self._slot_q[s], ids[j])
+            d, ids = rr_d, rr_i
+            evals = evals + self.k_c
+        else:
+            d, ids = d[:, : self.k], ids[:, : self.k]
 
         out = []
         for j, s in enumerate(idx):

@@ -1,0 +1,315 @@
+"""RetrievalSpec: the declarative distance-policy API (ISSUE 5).
+
+The paper closes by observing that building the graph under a *modified*
+distance while searching under the original one "paves a way to designing
+index-specific graph-construction distance functions".  Until this module
+that scenario lived in two string knobs (``index_sym``/``query_sym``) plus a
+dozen loose kwargs threaded differently through every layer.  Here the
+scenario itself becomes a first-class object, in two layers:
+
+``DistancePolicy`` — a composable combinator describing HOW a base distance
+is transformed before use.  The legacy symmetrization modes
+(none/avg/min/reverse/l2/natural) are named policies; the parametric
+combinators implement the paper's open research line:
+
+    Blend(alpha)            alpha*d(u,v) + (1-alpha)*d(v,u)
+                            (avg / reverse / the original distance are the
+                            alpha = 0.5 / 0 / 1 special cases, lowered to
+                            the dedicated wrappers for bit-parity)
+    MaxSym()                max(d(u,v), d(v,u))
+    RankBlend(alpha, tau)   convex mix of the forward distance with a
+                            monotone compressive proxy of the reversed rank
+
+Every policy ``bind``s against a base PairDistance and lowers to the same
+matmul-form contract (``prep_scan``/``prep_query``/``score``), so the
+batched engines and Pallas kernels run any policy unchanged.
+
+``RetrievalSpec`` — a frozen dataclass capturing the WHOLE scenario: base
+distance by registry name, build/search/rerank policies + ``k_c``, builder
+and engine knobs, and scheduler knobs.  It JSON round-trips
+(``to_dict``/``from_dict``), fingerprints itself for self-describing bench
+artifacts, and sweeps (``grid``) — the single currency consumed by
+``ANNIndex.build/searcher/scheduler``, ``OnlineIndex``, ``launch/serve.py
+--spec`` and the benchmark harnesses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import re
+from typing import Callable, Optional
+
+from .symmetrize import SYM_MODES, CombinedDistance, reverse_of, symmetrized
+
+# ---------------------------------------------------------------------------
+# DistancePolicy
+# ---------------------------------------------------------------------------
+
+POLICY_KINDS = SYM_MODES + ("max", "blend", "rankblend")
+
+_POLICY_RE = re.compile(r"^([a-z0-9_]+)(?:\(([^)]*)\))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class DistancePolicy:
+    """A named, optionally parametric graph-construction distance policy.
+
+    ``bind(base, natural=None)`` lowers the policy over a concrete
+    PairDistance; ``str(policy)`` is the canonical serialized form
+    (``"blend(0.25)"``), parsed back by ``DistancePolicy.parse``.
+    """
+
+    kind: str
+    alpha: Optional[float] = None  # blend / rankblend mix weight
+    tau: Optional[float] = None  # rankblend proxy scale
+
+    def __post_init__(self):
+        if self.kind not in POLICY_KINDS:
+            raise ValueError(f"unknown policy kind {self.kind!r}; known: {POLICY_KINDS}")
+        if self.kind in ("blend", "rankblend"):
+            if self.alpha is None or not 0.0 <= self.alpha <= 1.0:
+                raise ValueError(f"{self.kind} needs alpha in [0, 1], got {self.alpha}")
+        elif self.alpha is not None or self.tau is not None:
+            raise ValueError(f"policy {self.kind!r} takes no parameters")
+        if self.kind == "blend" and self.tau is not None:
+            # silently dropping it would break parse(str(p)) == p
+            raise ValueError("blend takes no tau")
+        if self.kind == "rankblend":
+            if self.tau is None:
+                object.__setattr__(self, "tau", 1.0)
+            elif self.tau <= 0:
+                raise ValueError(f"rankblend needs tau > 0, got {self.tau}")
+
+    # -- identity ------------------------------------------------------------
+
+    @property
+    def is_none(self) -> bool:
+        return self.kind == "none"
+
+    def __str__(self) -> str:
+        # repr() is the shortest float form that round-trips exactly, so
+        # parse(str(p)) == p for ANY parameter value
+        if self.kind == "blend":
+            return f"blend({self.alpha!r})"
+        if self.kind == "rankblend":
+            return f"rankblend({self.alpha!r},{self.tau!r})"
+        return self.kind
+
+    # -- serialization -------------------------------------------------------
+
+    @classmethod
+    def parse(cls, spec) -> "DistancePolicy":
+        """Coerce a policy from its serialized form (or pass one through)."""
+        if isinstance(spec, DistancePolicy):
+            return spec
+        if spec is None:
+            return cls("none")
+        if not isinstance(spec, str):
+            raise TypeError(f"cannot parse a policy from {type(spec).__name__}")
+        m = _POLICY_RE.match(spec.strip())
+        if not m:
+            raise ValueError(f"malformed policy {spec!r}")
+        kind, args = m.group(1), m.group(2)
+        params = [float(a) for a in args.split(",") if a.strip()] if args else []
+        if len(params) > 2:
+            raise ValueError(f"too many parameters in policy {spec!r}")
+        return cls(
+            kind,
+            alpha=params[0] if params else None,
+            tau=params[1] if len(params) > 1 else None,
+        )
+
+    # -- lowering ------------------------------------------------------------
+
+    def bind(self, base, natural: Optional[Callable] = None):
+        """Lower the policy over ``base``, returning a PairDistance.
+
+        The exact special cases of ``Blend`` lower to the dedicated legacy
+        wrappers so ``Blend(0.5)`` is bit-identical to ``avg``, ``Blend(0)``
+        to ``reverse`` and ``Blend(1)`` to the original distance.
+        """
+        if self.kind in SYM_MODES:
+            return symmetrized(base, self.kind, natural=natural)
+        if self.kind == "max":
+            return CombinedDistance(base, "max")
+        if self.kind == "blend":
+            if self.alpha == 1.0:
+                return base
+            if self.alpha == 0.5:
+                return symmetrized(base, "avg")
+            if self.alpha == 0.0:
+                return reverse_of(base)
+            return CombinedDistance(base, "blend", alpha=self.alpha)
+        return CombinedDistance(base, "rankblend", alpha=self.alpha, tau=self.tau)
+
+
+def Blend(alpha: float) -> DistancePolicy:  # noqa: N802 - combinator constructor
+    """alpha*d(u,v) + (1-alpha)*d(v,u): the paper's open line as one knob."""
+    return DistancePolicy("blend", alpha=float(alpha))
+
+
+def MaxSym() -> DistancePolicy:  # noqa: N802
+    """max(d(u,v), d(v,u)) — pessimistic symmetrization."""
+    return DistancePolicy("max")
+
+
+def RankBlend(alpha: float, tau: float = 1.0) -> DistancePolicy:  # noqa: N802
+    """Convex mix of d(u,v) with a monotone proxy of the reversed rank."""
+    return DistancePolicy("rankblend", alpha=float(alpha), tau=float(tau))
+
+
+NONE_POLICY = DistancePolicy("none")
+
+
+# ---------------------------------------------------------------------------
+# RetrievalSpec
+# ---------------------------------------------------------------------------
+
+_BUILDERS = ("nndescent", "swgraph")
+_BUILD_ENGINES = ("wave", "sequential")
+_ENGINES = ("batched", "reference")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalSpec:
+    """One frozen object describing a complete retrieval scenario.
+
+    Defaults mirror the historical kwarg defaults layer by layer, so a spec
+    constructed by the deprecation shim reproduces the old behavior
+    bit-for-bit.  ``search_policy != none`` is the full-symmetrization
+    scenario: the beam runs under the bound search policy and ``k_c``
+    candidates are re-ranked under the original distance — by the batch
+    searcher AND (since this spec) the slot scheduler at retire time.
+    """
+
+    # -- distance scenario
+    distance: str = "kl"  # base distance registry name
+    build_policy: DistancePolicy = NONE_POLICY  # graph-construction distance
+    search_policy: DistancePolicy = NONE_POLICY  # beam-guidance distance
+    k_c: Optional[int] = None  # rerank candidates (search_policy != none)
+
+    # -- construction
+    builder: str = "nndescent"
+    build_engine: str = "wave"
+    wave: int = 32
+    build_frontier: Optional[int] = None
+    NN: int = 15
+    ef_construction: int = 100
+    M_max: Optional[int] = None
+    nnd_iters: int = 8
+    n_entries: int = 4
+    capacity: Optional[int] = None
+
+    # -- search
+    k: int = 10
+    ef_search: int = 96
+    engine: str = "batched"
+    frontier: int = 2
+    adaptive: bool = False
+    patience: int = 1
+
+    # -- scheduler (continuous batching)
+    slots: int = 32
+    sched_frontier: int = 4
+    steps_per_sync: int = 1
+    compact: int = 32
+
+    def __post_init__(self):
+        # coerce serialized policies so replace()/grid() accept strings
+        for f in ("build_policy", "search_policy"):
+            v = getattr(self, f)
+            if not isinstance(v, DistancePolicy):
+                object.__setattr__(self, f, DistancePolicy.parse(v))
+        if self.builder not in _BUILDERS:
+            raise ValueError(f"unknown builder {self.builder!r}; known: {_BUILDERS}")
+        if self.build_engine not in _BUILD_ENGINES:
+            raise ValueError(
+                f"unknown build_engine {self.build_engine!r}; known: {_BUILD_ENGINES}"
+            )
+        if self.engine not in _ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; known: {_ENGINES}")
+        for f in ("wave", "NN", "ef_construction", "nnd_iters", "n_entries", "k",
+                  "ef_search", "frontier", "patience", "slots", "sched_frontier",
+                  "steps_per_sync", "compact"):
+            if int(getattr(self, f)) < 1:
+                raise ValueError(f"{f} must be >= 1, got {getattr(self, f)}")
+        if self.k_c is not None and self.k_c < self.k:
+            raise ValueError(f"k_c {self.k_c} < k {self.k}")
+
+    # -- distance lowering ---------------------------------------------------
+
+    def base_distance(self):
+        from .distances import get_distance
+
+        return get_distance(self.distance)
+
+    def bind_build(self, base=None, natural: Optional[Callable] = None):
+        base = base if base is not None else self.base_distance()
+        return self.build_policy.bind(base, natural=natural)
+
+    def bind_search(self, base=None, natural: Optional[Callable] = None):
+        base = base if base is not None else self.base_distance()
+        return self.search_policy.bind(base, natural=natural)
+
+    @property
+    def needs_rerank(self) -> bool:
+        """True when the beam runs under a modified distance and the results
+        must be re-ranked under the original one (paper's full-sym path)."""
+        return not self.search_policy.is_none
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["build_policy"] = str(self.build_policy)
+        d["search_policy"] = str(self.search_policy)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RetrievalSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown RetrievalSpec fields: {sorted(unknown)}")
+        return cls(**d)
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        s = json.dumps(self.to_dict(), indent=1, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(s + "\n")
+        return s
+
+    @classmethod
+    def from_json(cls, src: str) -> "RetrievalSpec":
+        """Parse a spec from a JSON string or a path to a JSON file."""
+        if "{" not in src:
+            with open(src) as f:
+                src = f.read()
+        return cls.from_dict(json.loads(src))
+
+    def fingerprint(self) -> str:
+        """Stable short hash of the canonical serialized form — recorded in
+        every bench artifact so baselines are self-describing."""
+        canon = json.dumps(self.to_dict(), sort_keys=True)
+        return hashlib.sha256(canon.encode()).hexdigest()[:12]
+
+    # -- composition ---------------------------------------------------------
+
+    def replace(self, **changes) -> "RetrievalSpec":
+        return dataclasses.replace(self, **changes)
+
+    def grid(self, **axes) -> list["RetrievalSpec"]:
+        """Cartesian sweep helper: ``spec.grid(ef_search=[32, 96],
+        build_policy=[Blend(a) for a in (0, 0.5, 1)])`` returns one spec per
+        combination, in deterministic (itertools.product) order."""
+        if not axes:
+            return [self]
+        names = list(axes)
+        out = []
+        for combo in itertools.product(*(axes[n] for n in names)):
+            out.append(self.replace(**dict(zip(names, combo))))
+        return out

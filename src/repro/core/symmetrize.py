@@ -55,6 +55,10 @@ class ReversedDistance:
     def needs_simplex(self):
         return self.base.needs_simplex
 
+    @property
+    def symmetric(self):
+        return getattr(self.base, "symmetric", False)
+
     def matrix(self, U, V):
         return self.base.matrix(V, U).T
 
@@ -112,6 +116,10 @@ class SymmetrizedDistance:
     @property
     def needs_simplex(self):
         return self.base.needs_simplex
+
+    @property
+    def symmetric(self):
+        return True  # symmetric by construction (Eqs. 2-3)
 
     def _combine(self, a, b):
         return (a + b) * 0.5 if self.mode == "avg" else jnp.minimum(a, b)
@@ -191,6 +199,101 @@ class ViewedDistance:
 
     def score(self, rows, qc):
         return self.base.score(rows, qc)
+
+
+@dataclasses.dataclass(frozen=True)
+class CombinedDistance:
+    """Parametric two-branch combinator over a PairDistance (ISSUE 5).
+
+    Evaluates both argument orders of ``base`` and combines them pointwise —
+    the generalisation of ``SymmetrizedDistance`` that the paper's closing
+    observation calls for ("index-specific graph-construction distance
+    functions").  Combine modes:
+
+        blend      alpha * d(u, v) + (1 - alpha) * d(v, u)
+                   (avg at alpha=0.5, reverse at 0, the original at 1 —
+                   those exact cases are lowered to the dedicated wrappers
+                   by ``DistancePolicy.bind`` for bit-parity)
+        max        max(d(u, v), d(v, u))  — the pessimistic symmetrization
+        rankblend  alpha * d(u, v) + (1 - alpha) * proxy(d(v, u)) where
+                   ``proxy(x) = tau * sign(x) * log1p(|x| / tau)`` is a
+                   monotone compressive stand-in for the reversed RANK:
+                   it preserves the reverse ordering while taming the heavy
+                   tail that strongly asymmetric divergences put on the
+                   reverse direction (ranks discard exactly that tail)
+
+    Same PairDistance contract as every other wrapper: two matmul-form
+    evaluations per block, ``prep_scan`` carries both branches as a pytree,
+    so the batched engines and kernels run it unchanged.
+    """
+
+    base: object  # any PairDistance
+    combine: str  # "blend" | "max" | "rankblend"
+    alpha: float = 0.5
+    tau: float = 1.0
+
+    def __post_init__(self):
+        if self.combine not in ("blend", "max", "rankblend"):
+            raise ValueError(f"unknown combine {self.combine!r}")
+        if self.combine in ("blend", "rankblend") and not 0.0 <= self.alpha <= 1.0:
+            raise ValueError(f"alpha must be in [0, 1], got {self.alpha}")
+        if self.combine == "rankblend" and self.tau <= 0.0:
+            raise ValueError(f"tau must be > 0, got {self.tau}")
+
+    @property
+    def _rev(self):
+        return reverse_of(self.base)
+
+    @property
+    def name(self):
+        if self.combine == "max":
+            return f"{self.base.name}-max"
+        if self.combine == "blend":
+            return f"{self.base.name}-blend({self.alpha:g})"
+        return f"{self.base.name}-rankblend({self.alpha:g},{self.tau:g})"
+
+    @property
+    def needs_simplex(self):
+        return self.base.needs_simplex
+
+    @property
+    def symmetric(self):
+        # blend is symmetric only at the avg point; rankblend never is
+        # (the proxy breaks the exchange symmetry even at alpha=0.5)
+        return self.combine == "max" or (self.combine == "blend" and self.alpha == 0.5)
+
+    def _combine(self, fwd, rev):
+        if self.combine == "max":
+            return jnp.maximum(fwd, rev)
+        if self.combine == "rankblend":
+            rev = self.tau * jnp.sign(rev) * jnp.log1p(jnp.abs(rev) / self.tau)
+        return self.alpha * fwd + (1.0 - self.alpha) * rev
+
+    def matrix(self, U, V):
+        return self._combine(self.base.matrix(U, V), self.base.matrix(V, U).T)
+
+    def query_matrix(self, Q, X, mode: str = "left"):
+        fwd = self.base.query_matrix(Q, X, mode=mode)
+        rev = self.base.query_matrix(Q, X, mode="right" if mode == "left" else "left")
+        return self._combine(fwd, rev)
+
+    def pairwise(self, u, v):
+        return self._combine(self.base.pairwise(u, v), self.base.pairwise(v, u))
+
+    def pairwise_batch(self, U, V):
+        return jax.vmap(self.pairwise)(U, V)
+
+    def prep_scan(self, X):
+        return {"f": self.base.prep_scan(X), "r": self._rev.prep_scan(X)}
+
+    def prep_query(self, q):
+        return {"f": self.base.prep_query(q), "r": self._rev.prep_query(q)}
+
+    def score(self, rows, qc):
+        return self._combine(
+            self.base.score(rows["f"], qc["f"]),
+            self._rev.score(rows["r"], qc["r"]),
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -19,9 +19,18 @@ measured static-batch capacity) and are served by the slot-recycling
 scheduler (``repro.core.scheduler``): each of ``--slots`` slots retires its
 query the moment it converges and is refilled from the admission queue, so
 straggler queries stop inflating every co-batched request's latency.  The
-driver reports p50/p95/p99 latency for BOTH disciplines over the identical
-arrival trace, plus the per-query adaptive-frontier evaluation counts when
+driver reports p50/p95/p99 latency for all three disciplines (static,
+dispatch-on-idle dynamic batching, continuous) over the identical arrival
+trace, plus the per-query adaptive-frontier evaluation counts when
 ``--adaptive-frontier`` is set.
+
+Declarative scenarios (``--spec spec.json``): a serialized ``RetrievalSpec``
+fully defines the retrieval scenario — base distance, graph-construction
+policy (incl. the ``blend``/``max``/``rankblend`` combinators), search
+policy + rerank ``k_c``, builder/engine and scheduler knobs — while the CLI
+keeps the workload/traffic knobs (sizes, batch, churn, utilization).  A
+rerank spec (``search_policy != "none"``) is served through BOTH the batch
+searcher and the slot scheduler (retire-time rerank).
 """
 
 from __future__ import annotations
@@ -32,7 +41,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import ANNIndex, get_distance, knn_scan, recall_at_k
+from repro.core import ANNIndex, RetrievalSpec, get_distance, knn_scan, recall_at_k
 from repro.core.metrics import speedup_model
 from repro.data.synthetic import lda_like_histograms, split_queries
 
@@ -99,6 +108,67 @@ def simulate_static_batches(search, Q, arrivals, batch: int):
     return lat, ids_out, evals
 
 
+def simulate_dynamic_batches(search, Q, arrivals, max_batch: int):
+    """Dispatch-on-idle dynamic batching: the stronger classical baseline.
+
+    Unlike static batching, a batch never waits to FILL: the moment the
+    single server frees (or a request arrives at an idle server), every
+    waiting request — up to ``max_batch`` — dispatches immediately.  What
+    remains is the queue wait behind the in-service batch and the straggler
+    wait inside it (the two the slot scheduler also removes).  Ragged
+    dispatch sizes are padded up to power-of-two buckets so the jitted
+    engine never recompiles mid-trace (each bucket is warmed first); the
+    padded rows' compute is honestly charged to the batch, exactly like a
+    fixed-shape production server.
+
+    Returns (latencies (n,), ids (n, k), n_evals (n,)) in request order —
+    the same contract as ``simulate_static_batches``.
+    """
+    Q = np.asarray(Q)
+    arrivals = np.asarray(arrivals, float)
+    n = Q.shape[0]
+    order = np.argsort(arrivals, kind="stable")
+    buckets = []
+    b = 1
+    while b < max_batch:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_batch)
+    for b in buckets:  # warm every dispatch shape outside the timed region
+        # tile rows rather than slice: a bucket can exceed n (a dispatch of
+        # n waiting requests pads UP to the bucket), and an unwarmed shape
+        # would put its compile inside the timed region
+        jax.block_until_ready(search(Q[np.arange(b) % n])[0])
+    lat = np.zeros((n,), float)
+    evals = np.zeros((n,), np.int64)
+    rows = {}
+    t_free = 0.0
+    i = 0
+    while i < n:
+        # server idle: dispatch everything that has arrived by now
+        t_disp = max(t_free, float(arrivals[order[i]]))
+        j = i
+        while j < n and arrivals[order[j]] <= t_disp and j - i < max_batch:
+            j += 1
+        sel = order[i:j]
+        bucket = next(b for b in buckets if b >= len(sel))
+        pad = np.concatenate([sel, np.repeat(sel[:1], bucket - len(sel))])
+        t0 = time.perf_counter()
+        out = search(Q[pad])
+        jax.block_until_ready(out[0])
+        service = time.perf_counter() - t0
+        t_free = t_disp + service
+        lat[sel] = t_free - arrivals[sel]
+        batch_ids = np.asarray(out[1])
+        batch_evals = np.asarray(out[2])
+        for p, r in enumerate(sel):
+            rows[int(r)] = batch_ids[p]
+            evals[r] = batch_evals[p]
+        i = j
+    ids_out = np.stack([rows[j] for j in range(n)])
+    return lat, ids_out, evals
+
+
 def run_continuous(idx, Q, arrivals, *, k: int, ef_search: int, slots: int,
                    frontier: int, adaptive: bool = False,
                    steps_per_sync: int = 4, realtime: bool = False):
@@ -129,7 +199,7 @@ def run_churn(idx, Q, pool, *, rounds: int, insert_n: int, delete_n: int,
     """
     online = idx.ensure_online()
     dist = idx.dist
-    search = idx.searcher(k, ef_search, frontier=frontier)
+    search = idx.searcher(k, ef_search, frontier=frontier, adaptive=False)
     jax.block_until_ready(search(Q[:batch])[0])  # steady-state timings
     rng = np.random.default_rng(0)
     ins_t, del_t, q_t, n_ins, n_del = 0.0, 0.0, [], 0, 0
@@ -182,7 +252,8 @@ def run_churn(idx, Q, pool, *, rounds: int, insert_n: int, delete_n: int,
     return stats
 
 
-def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
+def build_and_serve(*, spec: RetrievalSpec | None = None,
+                    distance: str = "kl", n_db: int = 20_000, dim: int = 32,
                     n_queries: int = 256, batch: int = 64, k: int = 10,
                     ef_search: int = 96, index_sym: str = "none",
                     builder: str = "nndescent", build_engine: str = "wave",
@@ -193,6 +264,21 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
                     continuous: bool = False, slots: int = 48,
                     cont_frontier: int = 12, adaptive_frontier: bool = False,
                     utilization: float = 0.4, verbose: bool = True):
+    if spec is None:
+        spec = RetrievalSpec(
+            distance=distance, build_policy=index_sym, builder=builder,
+            build_engine=build_engine, wave=wave, NN=15, ef_construction=100,
+            n_entries=n_entries, capacity=capacity, k=k, ef_search=ef_search,
+            engine=engine, frontier=frontier, slots=slots,
+            sched_frontier=cont_frontier, adaptive=adaptive_frontier,
+            steps_per_sync=4,
+        )
+    else:
+        # the spec IS the scenario; the CLI keeps workload/traffic knobs
+        distance, k, ef_search = spec.distance, spec.k, spec.ef_search
+        engine, frontier = spec.engine, spec.frontier
+        slots, cont_frontier = spec.slots, spec.sched_frontier
+        adaptive_frontier, capacity = spec.adaptive, spec.capacity
     key = jax.random.PRNGKey(0)
     pool_n = churn_rounds * churn_insert
     data = lda_like_histograms(key, n_db + n_queries + pool_n, dim)
@@ -201,18 +287,21 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
     dist = get_distance(distance)
     if churn_rounds > 0 and capacity is None:
         capacity = n_db + pool_n
+    if capacity != spec.capacity:
+        spec = spec.replace(capacity=capacity)
     if capacity is not None and engine != "batched":
         raise ValueError("mutable (--capacity / --churn-rounds) serving "
                          "requires --engine batched")
 
     t0 = time.time()
-    idx = ANNIndex.build(X, dist, index_sym=index_sym, builder=builder,
-                         build_engine=build_engine, wave=wave,
-                         NN=15, ef_construction=100, n_entries=n_entries,
-                         capacity=capacity,
-                         key=jax.random.fold_in(key, 2))
+    idx = ANNIndex.build(X, dist, spec=spec, key=jax.random.fold_in(key, 2))
     build_s = time.time() - t0
-    search = idx.searcher(k, ef_search, engine=engine, frontier=frontier)
+    # the batch/static/dynamic serving phases are the fixed-frontier
+    # BASELINE: pin adaptive off so a spec (or --adaptive-frontier) that
+    # turns on the per-query width policy changes only the continuous path,
+    # never the yardstick the gated ratios divide by
+    search = idx.searcher(k, ef_search, engine=engine, frontier=frontier,
+                          adaptive=False)
     # warm the jit cache on every batch shape served (full batches plus a
     # possible ragged tail) so latency percentiles reflect steady state,
     # not compilation
@@ -246,10 +335,12 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
         "eval_reduction": round(speedup_model(n_db, np.concatenate(evals)), 1),
         "p50_latency_ms": round(1e3 * float(np.percentile(lat, 50)), 3),
         "p99_latency_ms": round(1e3 * float(np.percentile(lat, 99)), 3),
+        "spec": spec.to_dict(),
+        "spec_fingerprint": spec.fingerprint(),
     }
     if verbose:
-        print(f"[serve] dist={distance} index_sym={index_sym} n={n_db} "
-              f"-> {stats}")
+        print(f"[serve] dist={distance} build={spec.build_policy} "
+              f"search={spec.search_policy} n={n_db} -> {stats}")
 
     if continuous:
         # Poisson load at `utilization` x the measured static capacity, so
@@ -271,6 +362,7 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
                        max(r.t_done for r in res))
         arrivals = poisson_arrivals(n_queries, rate, np.random.default_rng(1))
         s_lat, s_ids, _ = simulate_static_batches(search, Q, arrivals, batch)
+        d_lat, d_ids, _ = simulate_dynamic_batches(search, Q, arrivals, batch)
         # the slot engine's latency is (steps x tick), not batch service, so
         # it prefers a fatter frontier than the dispatch-batched engine
         c_lat, c_ids, c_evals = run_continuous(
@@ -286,8 +378,13 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
             "eval_reduction": round(speedup_model(n_db, c_evals), 1),
             **latency_stats(c_lat),
             "static_p99_ms": latency_stats(s_lat)["p99_ms"],
+            "dynamic_p99_ms": latency_stats(d_lat)["p99_ms"],
+            "dynamic_recall@k": round(
+                recall_at_k(d_ids, np.asarray(true_ids)), 4),
             "p99_speedup_vs_static": round(
                 float(np.percentile(s_lat, 99) / np.percentile(c_lat, 99)), 2),
+            "p99_speedup_vs_dynamic": round(
+                float(np.percentile(d_lat, 99) / np.percentile(c_lat, 99)), 2),
         }
         stats["continuous"] = cont
         if verbose:
@@ -302,24 +399,33 @@ def build_and_serve(*, distance: str = "kl", n_db: int = 20_000, dim: int = 32,
     return stats
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--distance", default="kl")
+    ap.add_argument("--spec", default=None,
+                    help="path to a RetrievalSpec JSON file; fully defines "
+                         "the retrieval scenario (distance, build/search "
+                         "policies, builder/engine/scheduler knobs) — the "
+                         "remaining flags keep workload/traffic control and "
+                         "may not be combined with it")
+    # scenario flags: default None so an explicit use can be detected and
+    # rejected when --spec already defines the scenario (a silently-ignored
+    # --ef would make the user believe they swept something they didn't)
+    ap.add_argument("--distance", default=None)
     ap.add_argument("--n-db", type=int, default=20_000)
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--ef", type=int, default=96)
-    ap.add_argument("--index-sym", default="none")
-    ap.add_argument("--builder", default="nndescent", choices=["nndescent", "swgraph"])
-    ap.add_argument("--build-engine", default="wave", choices=["wave", "sequential"],
+    ap.add_argument("--ef", type=int, default=None, dest="ef_search")
+    ap.add_argument("--index-sym", default=None)
+    ap.add_argument("--builder", default=None, choices=["nndescent", "swgraph"])
+    ap.add_argument("--build-engine", default=None, choices=["wave", "sequential"],
                     help="swgraph construction engine (wave-parallel vs reference)")
-    ap.add_argument("--wave", type=int, default=64,
+    ap.add_argument("--wave", type=int, default=None,
                     help="points inserted per construction wave (swgraph builder)")
-    ap.add_argument("--engine", default="batched", choices=["batched", "reference"])
-    ap.add_argument("--frontier", type=int, default=4,
+    ap.add_argument("--engine", default=None, choices=["batched", "reference"])
+    ap.add_argument("--frontier", type=int, default=None,
                     help="beam candidates expanded per lock-step (batched engine)")
-    ap.add_argument("--entries", type=int, default=4,
+    ap.add_argument("--entries", type=int, default=None, dest="n_entries",
                     help="entry points seeded per query (medoid + random)")
     ap.add_argument("--capacity", type=int, default=None,
                     help="mutable-index slot budget (enables insert/delete; "
@@ -335,32 +441,41 @@ def main():
                     help="also serve a Poisson arrival trace through the "
                          "slot-recycling scheduler and compare latency "
                          "percentiles against static batching")
-    ap.add_argument("--slots", type=int, default=48,
+    ap.add_argument("--slots", type=int, default=None,
                     help="concurrent in-flight queries in the scheduler")
-    ap.add_argument("--cont-frontier", type=int, default=12,
+    ap.add_argument("--cont-frontier", type=int, default=None,
                     help="per-slot frontier for the continuous scheduler "
                          "(fatter than --frontier: slot latency is steps x "
                          "tick, not batch service)")
-    ap.add_argument("--adaptive-frontier", action="store_true",
+    ap.add_argument("--adaptive-frontier", action="store_true", default=None,
                     help="per-slot adaptive frontier width (fewer distance "
                          "evaluations at equal recall)")
     ap.add_argument("--utilization", type=float, default=0.4,
                     help="Poisson arrival rate as a fraction of the measured "
                          "static-batch capacity")
-    args = ap.parse_args()
-    build_and_serve(distance=args.distance, n_db=args.n_db, dim=args.dim,
-                    n_queries=args.queries, batch=args.batch,
-                    ef_search=args.ef, index_sym=args.index_sym,
-                    builder=args.builder, build_engine=args.build_engine,
-                    wave=args.wave, engine=args.engine, frontier=args.frontier,
-                    n_entries=args.entries, capacity=args.capacity,
-                    churn_rounds=args.churn_rounds,
-                    churn_insert=args.churn_insert,
-                    churn_delete=args.churn_delete,
-                    continuous=args.continuous, slots=args.slots,
-                    cont_frontier=args.cont_frontier,
-                    adaptive_frontier=args.adaptive_frontier,
-                    utilization=args.utilization)
+    args = ap.parse_args(argv)
+    scenario = {
+        "distance": args.distance, "ef_search": args.ef_search,
+        "index_sym": args.index_sym, "builder": args.builder,
+        "build_engine": args.build_engine, "wave": args.wave,
+        "engine": args.engine, "frontier": args.frontier,
+        "n_entries": args.n_entries, "capacity": args.capacity,
+        "slots": args.slots, "cont_frontier": args.cont_frontier,
+        "adaptive_frontier": args.adaptive_frontier,
+    }
+    spec = None
+    if args.spec:
+        clash = sorted(k for k, v in scenario.items() if v is not None)
+        if clash:
+            ap.error(f"--spec defines the scenario; conflicting flags: {clash}")
+        spec = RetrievalSpec.from_json(args.spec)
+    return build_and_serve(
+        spec=spec,
+        n_db=args.n_db, dim=args.dim, n_queries=args.queries,
+        batch=args.batch, churn_rounds=args.churn_rounds,
+        churn_insert=args.churn_insert, churn_delete=args.churn_delete,
+        continuous=args.continuous, utilization=args.utilization,
+        **{k: v for k, v in scenario.items() if v is not None})
 
 
 if __name__ == "__main__":

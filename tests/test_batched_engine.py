@@ -223,6 +223,67 @@ def test_engine_jit_nojit_deterministic_at_frontier_gt1():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_offline_adaptive_frontier_cuts_evals_at_equal_recall(data):
+    """ISSUE-5 satellite: the PR-4 per-query width policy inside the
+    closed-batch while_loop (t_cur carried in the loop state)."""
+    Q, db = data
+    dist = get_distance("kl")
+    idx = _index(db, dist)
+    _, true_ids = knn_scan(dist, Q, db, K)
+    fixed = make_step_searcher(dist, idx.neighbors, db, ef=80, k=K,
+                               entries=idx.entries, frontier=4)
+    adapt = make_step_searcher(dist, idx.neighbors, db, ef=80, k=K,
+                               entries=idx.entries, frontier=4, adaptive=True)
+    _, i_f, e_f, _ = fixed(Q)
+    _, i_a, e_a, _ = adapt(Q)
+    ev_f = float(jnp.mean(e_f.astype(jnp.float32)))
+    ev_a = float(jnp.mean(e_a.astype(jnp.float32)))
+    assert ev_a < 0.95 * ev_f, (ev_a, ev_f)
+    r_f = recall_at_k(np.asarray(i_f), np.asarray(true_ids))
+    r_a = recall_at_k(np.asarray(i_a), np.asarray(true_ids))
+    assert r_a >= r_f - 0.02, (r_a, r_f)
+
+
+def test_offline_adaptive_false_is_the_untouched_loop(data):
+    """adaptive=False must leave the engine bit-for-bit unchanged (the
+    existing parity suites run through this exact path)."""
+    Q, db = data
+    dist = get_distance("kl")
+    idx = _index(db, dist)
+    plain = make_step_searcher(dist, idx.neighbors, db, ef=48, k=K,
+                               entries=idx.entries, frontier=4)
+    off = make_step_searcher(dist, idx.neighbors, db, ef=48, k=K,
+                             entries=idx.entries, frontier=4, adaptive=False)
+    for a, b in zip(plain(Q), off(Q)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_offline_adaptive_bit_identical_to_scheduler_adaptive(data):
+    """The offline adaptive while_loop and the slot scheduler's host tick
+    loop share one width-policy function (`adaptive_width_update`) and one
+    `beam_step`: a closed batch with enough slots must produce the SAME
+    beams, eval counts and hop counts either way."""
+    from repro.core.scheduler import GraphView, SlotScheduler
+
+    Q, db = data
+    dist = get_distance("kl")
+    idx = _index(db, dist)
+    eng = make_step_searcher(dist, idx.neighbors, db, ef=48, k=K,
+                             entries=idx.entries, frontier=4, adaptive=True,
+                             use_pallas=False)
+    d_ref, i_ref, e_ref, h_ref = eng(Q)
+    view = GraphView(idx.neighbors, dist.prep_scan(db), None, idx.entries)
+    sched = SlotScheduler(dist, lambda: view, dim=db.shape[1], slots=N_Q,
+                          ef=48, k=K, frontier=4, adaptive=True,
+                          use_pallas=False)
+    res = sched.run_stream(np.asarray(Q))
+    for j, r in enumerate(res):
+        np.testing.assert_array_equal(r.ids, np.asarray(i_ref[j]))
+        np.testing.assert_array_equal(r.dists, np.asarray(d_ref[j]))
+        assert r.n_evals == int(e_ref[j])
+        assert r.hops == int(h_ref[j])
+
+
 def test_select_entries_medoid_first_unique(data):
     _, db = data
     dist = get_distance("kl")

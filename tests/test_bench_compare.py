@@ -49,14 +49,28 @@ def _online_doc():
 def _serve_doc():
     return {
         "static": {"capacity_qps": 1300.0, "recall@10": 0.9995, "p99_ms": 115.0},
+        "dynamic": {"max_batch": 32, "recall@10": 0.9995, "p99_ms": 74.0},
         "continuous": {"slots": 48, "recall@10": 0.9995, "p99_ms": 38.0},
         "adaptive": {"recall@10": 0.9995, "eval_reduction_pct": 52.3},
-        "slo": {"offered_qps": 394.0, "p50_speedup": 2.2, "p99_speedup": 3.0},
+        "slo": {"offered_qps": 394.0, "p50_speedup": 2.2, "p99_speedup": 3.0,
+                "p99_speedup_vs_dynamic": 1.9},
+    }
+
+
+def _spec_doc():
+    return {
+        "spec_fingerprint": "abc123def456",
+        "blend_sweep": [
+            {"alpha": 0.0, "ef": 96, "recall@10": 0.97, "eval_reduction": 3.1},
+            {"alpha": 0.5, "ef": 96, "recall@10": 0.995, "eval_reduction": 3.4},
+            {"alpha": 1.0, "ef": 96, "recall@10": 0.998, "eval_reduction": 3.6},
+        ],
     }
 
 
 def test_identical_runs_pass():
-    for doc in (_engine_doc(), _build_doc(), _online_doc(), _serve_doc()):
+    for doc in (_engine_doc(), _build_doc(), _online_doc(), _serve_doc(),
+                _spec_doc()):
         rows, failures, _ = compare(doc, copy.deepcopy(doc), qps_tol=0.15, recall_tol=0.005)
         assert rows and not failures
 
@@ -159,6 +173,45 @@ def test_serve_schema_gates_ratios_and_recalls_uncalibrated():
     assert [(f["section"], f["metric"]) for f in failures] == [
         ("continuous", "recall@10")
     ]
+
+
+def test_serve_schema_gates_dynamic_baseline_recall():
+    """The dispatch-on-idle baseline row is recall-gated like every other
+    discipline (its latency ratio is reported, not gated)."""
+    fresh = _serve_doc()
+    fresh["dynamic"]["recall@10"] -= 0.01
+    _, failures, _ = compare(_serve_doc(), fresh, qps_tol=0.2, recall_tol=0.005)
+    assert [(f["section"], f["metric"]) for f in failures] == [
+        ("dynamic", "recall@10")
+    ]
+    fresh = _serve_doc()
+    fresh["dynamic"]["p99_ms"] *= 4.0  # absolute latency: NOT gated
+    fresh["slo"]["p99_speedup_vs_dynamic"] = 0.5  # reported, not gated
+    _, failures, _ = compare(_serve_doc(), fresh, qps_tol=0.2, recall_tol=0.005)
+    assert not failures
+
+
+def test_spec_schema_gates_blend_sweep_recall_and_eval_reduction():
+    """The RetrievalSpec Blend(alpha) sweep: per-(alpha, ef) recall@10 drops
+    beyond noise fail, and a shrinking eval reduction (a ratio — no
+    calibration) fails under the relative tolerance."""
+    fresh = _spec_doc()
+    fresh["blend_sweep"][1]["recall@10"] -= 0.01
+    _, failures, _ = compare(_spec_doc(), fresh, qps_tol=0.2, recall_tol=0.005)
+    assert [(f["section"], f["metric"], f["config"]) for f in failures] == [
+        ("blend_sweep", "recall@10", "alpha=0.5, ef=96")
+    ]
+    fresh = _spec_doc()
+    fresh["blend_sweep"][2]["eval_reduction"] *= 0.7  # construction regressed
+    _, failures, cal = compare(_spec_doc(), fresh, qps_tol=0.2,
+                               recall_tol=0.005, calibrate=True)
+    assert [f["metric"] for f in failures] == ["eval_reduction"]
+    assert cal == 1.0  # calibration=None schema
+    # quick-mode subset: only matching (alpha, ef) points compared
+    fresh = _spec_doc()
+    fresh["blend_sweep"] = fresh["blend_sweep"][:2]
+    _, failures, _ = compare(_spec_doc(), fresh, qps_tol=0.2, recall_tol=0.005)
+    assert not failures
 
 
 def test_only_matching_configs_compared():

@@ -22,6 +22,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.distances import available_distances, get_distance
+from repro.core.spec import Blend, DistancePolicy, MaxSym, RankBlend
+from repro.core.symmetrize import reverse_of, symmetrized
 from repro.data.synthetic import random_histograms
 
 # every registry entry + extra Renyi alphas (the registry itself carries
@@ -123,6 +125,122 @@ def test_symmetric_cases_are_symmetric(name):
         dist.pairwise_batch(U, V), dist.pairwise_batch(V, U), rtol=1e-4, atol=1e-5
     )
     assert dist.symmetric
+
+
+# ---------------------------------------------------------------------------
+# parametric combinators (ISSUE 5): Blend / MaxSym / RankBlend
+# ---------------------------------------------------------------------------
+
+COMBINATORS = [Blend(0.25), Blend(0.75), MaxSym(), RankBlend(0.6), RankBlend(0.8, 2.0)]
+
+
+@pytest.mark.parametrize("policy", COMBINATORS, ids=str)
+@pytest.mark.parametrize("base", ["kl", "itakura_saito"])
+def test_combinator_batched_forms_agree_with_scalar_oracle(base, policy):
+    """Every combinator exposes the full PairDistance contract: matrix, both
+    query_matrix modes, pairwise_batch and the prep_scan/score gather path
+    all reproduce its own scalar pairwise oracle."""
+    dist = policy.bind(get_distance(base))
+    U = _data(10, 6, 12)
+    V = _data(11, 5, 12)
+    want = _oracle(dist, U, V)
+    np.testing.assert_allclose(dist.matrix(U, V), want, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(
+        dist.query_matrix(V, U, mode="left"), want.T, rtol=RTOL, atol=ATOL
+    )
+    np.testing.assert_allclose(
+        dist.query_matrix(U, V, mode="right"), want, rtol=RTOL, atol=ATOL
+    )
+    W = _data(12, 6, 12)
+    np.testing.assert_allclose(
+        dist.pairwise_batch(U, W), np.diagonal(_oracle(dist, U, W)),
+        rtol=RTOL, atol=ATOL,
+    )
+    # the gather contract the beam engines drive (dup rows are legal)
+    X = _data(13, 9, 10)
+    Q = _data(14, 3, 10)
+    consts = dist.prep_scan(X)
+    rows_idx = jnp.asarray([0, 3, 3, 8, 5], jnp.int32)
+    want_s = _oracle(dist, X[rows_idx], Q)
+    for b in range(3):
+        qc = dist.prep_query(Q[b])
+        rows = jax.tree.map(lambda a: a[rows_idx], consts)
+        np.testing.assert_allclose(
+            np.asarray(dist.score(rows, qc)), want_s[:, b], rtol=RTOL, atol=ATOL
+        )
+
+
+@pytest.mark.parametrize(
+    "policy", [Blend(0.25), Blend(0.75), RankBlend(0.6)], ids=str
+)
+def test_combinator_asymmetry_preserved_off_center(policy):
+    """Blend(alpha != 0.5) and RankBlend stay genuinely non-symmetric — the
+    whole point of the parametric construction-distance line."""
+    dist = policy.bind(get_distance("kl"))
+    U = _data(15, 32, 24)
+    V = _data(16, 32, 24)
+    fwd = np.asarray(dist.pairwise_batch(U, V))
+    rev = np.asarray(dist.pairwise_batch(V, U))
+    assert np.max(np.abs(fwd - rev)) > 1e-3, f"{dist.name} looks symmetrized"
+    M = np.asarray(dist.matrix(U, V))
+    Mt = np.asarray(dist.matrix(V, U)).T
+    assert np.max(np.abs(M - Mt)) > 1e-3
+    assert not dist.symmetric
+
+
+def test_maxsym_and_blend_half_are_symmetric():
+    for policy in (MaxSym(), Blend(0.5)):
+        dist = policy.bind(get_distance("itakura_saito"))
+        U = _data(17, 16, 12)
+        V = _data(18, 16, 12)
+        np.testing.assert_allclose(
+            dist.pairwise_batch(U, V), dist.pairwise_batch(V, U),
+            rtol=1e-4, atol=1e-5,
+        )
+        assert dist.symmetric
+
+
+def test_blend_endpoints_bit_identical_to_legacy_wrappers():
+    """Blend(0.5) == avg, Blend(0) == reverse, Blend(1) == the original —
+    not just numerically close: the SAME wrapper, hence the same floats."""
+    base = get_distance("kl")
+    U = _data(19, 12, 16)
+    V = _data(20, 10, 16)
+    pairs = [
+        (Blend(0.5).bind(base), symmetrized(base, "avg")),
+        (Blend(0.0).bind(base), reverse_of(base)),
+        (Blend(1.0).bind(base), base),
+    ]
+    for got, want in pairs:
+        np.testing.assert_array_equal(
+            np.asarray(got.matrix(U, V)), np.asarray(want.matrix(U, V))
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.query_matrix(V, U, mode="left")),
+            np.asarray(want.query_matrix(V, U, mode="left")),
+        )
+        consts_g, consts_w = got.prep_scan(U), want.prep_scan(U)
+        qc_g, qc_w = got.prep_query(V[0]), want.prep_query(V[0])
+        np.testing.assert_array_equal(
+            np.asarray(got.score(consts_g, qc_g)),
+            np.asarray(want.score(consts_w, qc_w)),
+        )
+
+
+def test_rankblend_proxy_is_monotone_in_reverse_distance():
+    """The rank proxy must preserve the reverse ORDERING (that is what makes
+    it a rank stand-in): with alpha=0 the combined distance ranks any
+    candidate set exactly like the reversed distance does."""
+    base = get_distance("itakura_saito")
+    dist = DistancePolicy("rankblend", alpha=0.0, tau=1.0).bind(base)
+    rev = reverse_of(base)
+    Q = _data(21, 3, 12)
+    X = _data(22, 40, 12)
+    d_rb = np.asarray(dist.query_matrix(Q, X, mode="left"))
+    d_rev = np.asarray(rev.query_matrix(Q, X, mode="left"))
+    for b in range(Q.shape[0]):
+        np.testing.assert_array_equal(np.argsort(d_rb[b], kind="stable"),
+                                      np.argsort(d_rev[b], kind="stable"))
 
 
 @settings(max_examples=20, deadline=None)

@@ -203,10 +203,62 @@ def test_static_scheduler_fails_loud_after_online_conversion(setup):
     assert 5 not in set(res[0].ids.tolist())
 
 
-def test_scheduler_rejects_rerank_scenario(setup):
+def test_scheduler_serves_rerank_spec_identical_to_batch_searcher(setup):
+    """ISSUE-5 acceptance: a rerank spec (search_policy != none) is served
+    by the scheduler with results identical to the batch searcher + rerank
+    path — the beams are bit-identical (same slot state machine) and each
+    retired request's k_c candidates re-rank under the original distance
+    (ids exactly equal; distances to float precision, since the batch path
+    reranks all B rows in one vmapped call and the scheduler reranks one
+    fixed-shape row per retire)."""
+    from repro.core import RetrievalSpec
+
     dist, Q, db, _ = setup
-    idx = ANNIndex.build(db[:200], dist, index_sym="min", query_sym="min",
-                         builder="nndescent", NN=8, nnd_iters=4,
-                         key=jax.random.PRNGKey(4))
-    with pytest.raises(ValueError, match="query_sym"):
-        idx.scheduler(K, EF)
+    spec = RetrievalSpec(distance="kl", build_policy="min", search_policy="min",
+                         k_c=40, builder="nndescent", NN=8, nnd_iters=4,
+                         ef_search=EF, k=K)
+    idx = ANNIndex.build(db[:300], spec=spec, key=jax.random.PRNGKey(4))
+    bd, bi, bev, _ = idx.searcher(spec=spec)(Q)
+    # slot recycling in play: fewer slots than queries.  The scheduler's
+    # frontier is pinned to the batch searcher's (its spec default is the
+    # fatter sched_frontier) so the beam state machines match step for step
+    # and even the eval counts agree exactly.
+    sched = idx.scheduler(spec=spec, slots=6, frontier=spec.frontier)
+    res = sched.run_stream(np.asarray(Q))
+    assert [r.rid for r in res] == list(range(N_Q))
+    for j, r in enumerate(res):
+        np.testing.assert_array_equal(r.ids, np.asarray(bi[j]))
+        np.testing.assert_allclose(r.dists, np.asarray(bd[j]),
+                                   rtol=1e-6, atol=1e-7)
+        # rerank evals are accounted exactly like the batch path
+        assert r.n_evals == int(bev[j])
+    # reported distances are the ORIGINAL distance of the returned ids
+    want = np.asarray(dist.query_matrix(Q, db[:300], mode="left"))
+    for j, r in enumerate(res):
+        valid = r.ids >= 0
+        np.testing.assert_allclose(r.dists[valid],
+                                   want[j][r.ids[valid].astype(int)],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_scheduler_rerank_spec_on_mutable_index(setup):
+    """The rerank scenario composes with the online index: deleted points
+    never surface after the retire-time rerank either."""
+    from repro.core import RetrievalSpec
+
+    dist, Q, db, _ = setup
+    spec = RetrievalSpec(distance="kl", build_policy="min", search_policy="min",
+                         k_c=30, builder="nndescent", NN=8, nnd_iters=4,
+                         ef_search=EF, k=K, capacity=360)
+    idx = ANNIndex.build(db[:300], spec=spec, key=jax.random.PRNGKey(4))
+    sched = idx.scheduler(spec=spec, slots=4)
+    sched.warmup(np.asarray(Q[0]))
+    base = idx.search(Q[:8], k=K, ef_search=EF)
+    victims = np.unique(np.asarray(base[1])[:, 0])[:4]
+    idx.delete(victims)
+    res = sched.run_stream(np.asarray(Q[:8]))
+    alive_now = np.asarray(idx.online.alive)
+    for r in res:
+        valid = r.ids[r.ids >= 0].astype(int)
+        assert alive_now[valid].all(), (r.rid, r.ids)
+        assert not np.isin(valid, victims).any()
