@@ -1,0 +1,137 @@
+"""Spec auto-tuner benchmark: does the tuner recover (or beat) the hand spec?
+
+PR 5 found ``Blend(0.75)/ef=32`` by hand (``BENCH_spec.json``).  This bench
+runs ``repro.core.autotune`` on the SAME workload (KL over LDA-like
+histograms) with the hand spec as an always-promoted anchor, then picks the
+tuned spec under the hand spec's evaluation budget:
+
+  * ``hand``  — the anchor's final-rung objectives;
+  * ``tuned`` — ``TuneResult.pick(max_evals=hand_evals)``: best recall at
+    equal-or-fewer distance evaluations per query.  By construction
+    ``tuned`` can never be WORSE than ``hand`` (the anchor itself is
+    eligible) — the interesting question this artifact answers is by how
+    much the tuner improves on it, and whether that holds over time;
+  * ``holdout`` — both specs re-measured on queries the tuner NEVER saw
+    (the calibration/holdout split), recorded for honesty but not CI-gated
+    (holdout noise on small query sets would flake the gate).
+
+Results land in BENCH_autotune.json plus a fingerprint-sealed tuned-spec
+artifact (TUNED_spec.json) directly consumable by ``launch/serve.py --spec``
+and ``ANNIndex.build(spec=...)``.  CI gates the quick run against
+benchmarks/baselines/BENCH_autotune.quick.json via the "autotune" schema of
+compare_bench.py: both recalls, plus ``eval_headroom = hand_evals /
+tuned_evals`` (machine-independent ratio, >= 1 when the tuned spec costs no
+more than the hand spec).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from repro.core import ANNIndex, Blend, RetrievalSpec, autotune, knn_scan, recall_at_k
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+K, NN, EF_C, WAVE = 10, 15, 100, 64
+HAND_ALPHA, HAND_EF = 0.75, 32  # the BENCH_spec.json winner, found by hand
+
+
+def _measure(spec: RetrievalSpec, X, Q, true_np, key):
+    """Full-size build + search for a holdout row."""
+    idx = ANNIndex.build(X, spec=spec, key=key)
+    _, ids, n_evals, _ = idx.searcher(spec=spec)(Q)
+    jax.block_until_ready(ids)
+    return {
+        "recall@10": round(recall_at_k(np.asarray(ids), true_np), 4),
+        "evals_per_query": round(float(np.mean(np.asarray(n_evals))), 1),
+        "spec_fingerprint": spec.fingerprint(),
+    }
+
+
+def run_autotune(out_path: str = "BENCH_autotune.json",
+                 artifact_path: str = "TUNED_spec.json",
+                 quick: bool = False):
+    n_db, n_q, dim = (2048, 96, 32) if quick else (4096, 128, 32)
+    key = jax.random.PRNGKey(0)
+    data = lda_like_histograms(key, n_db + n_q, dim)
+    Q, X = split_queries(data, n_q, jax.random.fold_in(key, 1))
+    Q_cal, Q_hold = np.asarray(Q[: n_q // 2]), np.asarray(Q[n_q // 2:])
+    X = np.asarray(X)
+
+    base = RetrievalSpec(
+        distance="kl", builder="swgraph", build_engine="wave", wave=WAVE,
+        NN=NN, ef_construction=EF_C, k=K, frontier=1,
+    )
+    hand = base.replace(build_policy=Blend(HAND_ALPHA), ef_search=HAND_EF)
+    axes = dict(
+        build_policy=[Blend(a) for a in (0.0, 0.25, 0.5, 0.75, 1.0)],
+        ef_search=[16, 32] if quick else [16, 32, 96],
+        frontier=[1, 2],
+        adaptive=[False, True],
+    )
+    if not quick:
+        axes["patience"] = [1, 2]
+
+    res = autotune(X, Q_cal, base=base, axes=axes, anchors=[hand], k=K,
+                   rungs=2 if quick else 3, seed=0)
+
+    hand_cand = res.lookup(hand)
+    choice = res.pick(max_evals=hand_cand.objectives["evals_per_query"])
+    art = res.save(artifact_path, choice)
+
+    h, t = hand_cand.objectives, choice.objectives
+    assert t["recall"] >= h["recall"] and \
+        t["evals_per_query"] <= h["evals_per_query"], (h, t)
+
+    # holdout honesty check: both specs on queries the tuner never saw
+    dist = base.base_distance()
+    _, true_ids = knn_scan(dist, Q_hold, X, K)
+    true_np = np.asarray(true_ids)
+    holdout = {
+        "hand": _measure(hand, X, Q_hold, true_np, jax.random.fold_in(key, 2)),
+        "tuned": _measure(choice.spec, X, Q_hold, true_np,
+                          jax.random.fold_in(key, 2)),
+    }
+
+    print(f"[autotune] hand  blend({HAND_ALPHA})/ef={HAND_EF}: "
+          f"recall={h['recall']:.4f} evals={h['evals_per_query']:.0f}")
+    print(f"[autotune] tuned {choice.spec.build_policy}/"
+          f"ef={choice.spec.ef_search} adaptive={choice.spec.adaptive}: "
+          f"recall={t['recall']:.4f} evals={t['evals_per_query']:.0f} "
+          f"(headroom x{h['evals_per_query'] / t['evals_per_query']:.2f})")
+    print(f"[autotune] holdout: hand recall={holdout['hand']['recall@10']:.4f} "
+          f"tuned recall={holdout['tuned']['recall@10']:.4f}")
+
+    result = {
+        "workload": {"distance": "kl", "n_db": n_db,
+                     "n_cal_queries": len(Q_cal),
+                     "n_holdout_queries": len(Q_hold), "dim": dim, "k": K,
+                     "NN": NN, "ef_construction": EF_C, "wave": WAVE,
+                     "backend": jax.default_backend()},
+        "hand": {
+            "recall@10": h["recall"],
+            "evals_per_query": h["evals_per_query"],
+            "spec_fingerprint": hand_cand.fingerprint,
+        },
+        "tuned": {
+            "recall@10": t["recall"],
+            "evals_per_query": t["evals_per_query"],
+            "eval_headroom": round(
+                h["evals_per_query"] / t["evals_per_query"], 3),
+            "spec_fingerprint": choice.fingerprint,
+            "spec": choice.spec.to_dict(),
+        },
+        "holdout": holdout,
+        "frontier": [dict(spec_fingerprint=c.fingerprint, **c.objectives)
+                     for c in res.frontier],
+        "rungs": art["provenance"]["rungs"],
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == "__main__":
+    run_autotune()

@@ -84,6 +84,18 @@ SCHEMAS = {
             "blend_sweep": (("alpha", "ef"), "eval_reduction"),
         },
     },
+    # spec auto-tuner (bench_autotune): the tuned spec must keep matching or
+    # beating the hand-tuned anchor.  Both sections' recall@10 are gated;
+    # "tuned" additionally gates eval_headroom = hand_evals / tuned_evals —
+    # a machine-independent ratio (>= 1 means the tuned spec costs no more
+    # distance evaluations than the hand spec), treated like a throughput.
+    "autotune": {
+        "calibration": None,
+        "sections": {
+            "hand": ((), None),
+            "tuned": ((), "eval_headroom"),
+        },
+    },
 }
 
 RECALL = "recall@10"

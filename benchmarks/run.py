@@ -18,7 +18,7 @@ def main():
                     help="reduced combos/sizes (CI mode)")
     ap.add_argument("--only", default=None,
                     choices=[None, "table3", "fig12", "kernels", "engine",
-                             "build", "online", "serve", "spec"])
+                             "build", "online", "serve", "spec", "autotune"])
     ap.add_argument("--n-db", type=int, default=None)
     ap.add_argument("--n-q", type=int, default=None)
     args = ap.parse_args()
@@ -62,6 +62,12 @@ def main():
         from . import bench_spec
 
         bench_spec.run_spec(quick=args.quick)
+
+    if args.only in (None, "autotune"):
+        print("\n=== autotune: Pareto spec tuner vs the hand-tuned anchor ===")
+        from . import bench_autotune
+
+        bench_autotune.run_autotune(quick=args.quick)
 
     if args.only in (None, "table3"):
         print("\n=== Table 3: filter-and-refine symmetrization vs "

@@ -17,14 +17,21 @@ from .symmetrize import (
     ReversedDistance,
     SymmetrizedDistance,
     ViewedDistance,
+    calibrate_tau,
     symmetrized,
 )
 from .spec import (
+    TUNED_ARTIFACT_KIND,
     Blend,
     DistancePolicy,
     MaxSym,
     RankBlend,
     RetrievalSpec,
+    dominates,
+    load_spec,
+    load_tuned_artifact,
+    pareto_frontier,
+    tuned_artifact,
 )
 from .brute_force import ground_truth, knn_scan
 from .beam_search import beam_search_impl, make_batched_searcher
@@ -43,4 +50,5 @@ from .nndescent import build_nndescent
 from .online import OnlineIndex
 from .filter_refine import filter_and_refine, kc_sweep, rerank
 from .index import ANNIndex
+from .autotune import Candidate, TuneResult, autotune, build_cost_proxy, default_axes
 from .metrics import recall_at_k, speedup_model

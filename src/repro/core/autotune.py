@@ -1,0 +1,407 @@
+"""Spec auto-tuner: successive-halving Pareto search over ``RetrievalSpec.grid()``.
+
+PR 5 proved the paper's closing observation empirically — an INTERMEDIATE
+graph-construction blend beats both endpoint distances at a tight search
+budget (``BENCH_spec.json``) — but the winning ``Blend(0.75)/ef=32`` point
+was found by hand.  This module closes the loop the ROADMAP names: navigate
+the knob space (construction blend alpha x ef_search x frontier x wave x
+adaptive patience) AUTOMATICALLY, the way Tellez & Ruiz (arXiv:2201.07917)
+navigate graph hyperparameters — Pareto-optimal search with cheap-proxy
+pruning:
+
+  * candidates come from ``base.grid(**axes)`` (plus always-kept
+    ``anchors``, e.g. the hand-tuned incumbent a bench wants to beat);
+  * rung r evaluates the survivors on a SUBSAMPLED workload (a fixed
+    permutation prefix of the database, a prefix of the calibration
+    queries) — a cheap proxy of the full objectives;
+  * after each rung, configs outside the (recall, evals, build-cost)
+    Pareto frontier are pruned, and the frontier itself is capped to a
+    ``keep`` fraction (successive halving), so only promising configs pay
+    for full-size builds;
+  * builds are shared: specs differing only in SEARCH knobs (ef_search,
+    frontier, adaptive, patience, k) evaluate against one index per rung;
+  * the final rung runs at full size and yields the 3-objective Pareto
+    frontier plus a chosen tuned spec, exported as a fingerprint-sealed
+    artifact (``spec.tuned_artifact``) that ``launch/serve.py --spec`` and
+    ``ANNIndex.build(spec=...)`` consume directly.
+
+Objectives (per final-rung candidate):
+
+    recall           recall@k against an exact scan of the rung's database
+    evals_per_query  mean distance evaluations per query (the paper's
+                     hardware-independent cost; includes rerank k_c)
+    build_cost       deterministic sequential-dispatch-depth proxy of
+                     construction cost (``build_cost_proxy``) — wall-time
+                     is machine noise, the proxy is reproducible
+
+Everything is deterministic under a fixed ``seed``: subsampling uses a
+fixed permutation, builds use per-group folded PRNG keys, promotion
+tie-breaks end on the spec fingerprint.  The same call twice yields the
+same promotion history and the same tuned spec (asserted in
+``tests/test_autotune.py``).
+
+The tuner also retires the last hand-tuned magic number in the
+distance-policy layer: any ``rankblend`` policy with ``tau=None`` is
+resolved against the calibration database (median reversed-distance scale,
+``symmetrize.calibrate_tau``) before evaluation, so artifacts always carry
+concrete, reproducible parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from .brute_force import knn_scan
+from .metrics import recall_at_k
+from .spec import (
+    Blend,
+    RetrievalSpec,
+    pareto_frontier,
+    tuned_artifact,
+)
+
+# objective directions (keys of every Candidate.objectives dict)
+MAXIMIZE = ("recall",)
+MINIMIZE = ("evals_per_query", "build_cost")
+
+# spec fields that change the BUILT GRAPH; specs agreeing on all of them
+# share one index per rung (search knobs re-use it)
+_BUILD_FIELDS = (
+    "distance", "build_policy", "builder", "build_engine", "wave",
+    "build_frontier", "NN", "ef_construction", "M_max", "nnd_iters",
+    "n_entries",
+)
+
+
+def default_axes(quick: bool = False) -> dict:
+    """The ROADMAP's five tuning axes with sensible sweep values.
+
+    ``quick=True`` trims the grid for CI-speed runs (same axes, fewer
+    values).  Callers may pass any subset of these (or entirely different
+    axes) to ``autotune(axes=...)``.
+    """
+    if quick:
+        return dict(
+            build_policy=[Blend(a) for a in (0.0, 0.25, 0.5, 0.75, 1.0)],
+            ef_search=[16, 32],
+            frontier=[1, 2],
+            adaptive=[False, True],
+        )
+    return dict(
+        build_policy=[Blend(a) for a in (0.0, 0.25, 0.5, 0.75, 1.0)],
+        ef_search=[16, 32, 96],
+        frontier=[1, 2],
+        wave=[32, 64],
+        adaptive=[False, True],
+        patience=[1, 2],
+    )
+
+
+def build_cost_proxy(spec: RetrievalSpec, n: int) -> float:
+    """Deterministic construction-cost proxy: sequential dispatch depth.
+
+    Wall-clock build time is machine- and load-dependent, which would make
+    tuner promotion non-reproducible; what the wave engine actually trades
+    with ``wave`` is the NUMBER OF SEQUENTIAL DISPATCH ROUNDS, each a beam
+    search of depth ~``ef_construction``.  The proxy counts exactly that:
+
+        swgraph/wave        ceil(n / wave) * ef_construction
+        swgraph/sequential  n * ef_construction
+        nndescent           nnd_iters * NN  (refinement rounds x row width)
+
+    Only comparable within one builder family — the tuner never mixes
+    builders on a single frontier axis without noting it.
+    """
+    if spec.builder == "swgraph":
+        rounds = (n if spec.build_engine == "sequential"
+                  else math.ceil(n / spec.wave))
+        return float(rounds * spec.ef_construction)
+    return float(spec.nnd_iters * spec.NN)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One evaluated configuration: a concrete spec + measured objectives."""
+
+    spec: RetrievalSpec
+    objectives: dict  # recall / evals_per_query / build_cost
+
+    @property
+    def fingerprint(self) -> str:
+        return self.spec.fingerprint()
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """Everything ``autotune`` measured, plus selection/export helpers.
+
+    Attributes:
+        base: the base spec the grid was swept around.
+        candidates: final-rung (full-size) evaluations, grid order.
+        frontier: the (recall, evals_per_query, build_cost) Pareto subset
+            of ``candidates``.
+        history: one record per rung — ``{"n", "n_queries", "evaluated",
+            "survivors"}`` with fingerprint lists, so promotion is fully
+            auditable (and determinism testable).
+        calibration: workload description (sizes, k, distance, seed, the
+            resolved rankblend tau).
+    """
+
+    base: RetrievalSpec
+    candidates: list[Candidate]
+    frontier: list[Candidate]
+    history: list[dict]
+    calibration: dict
+
+    def lookup(self, spec: RetrievalSpec) -> Candidate:
+        """Final-rung candidate for ``spec`` (by fingerprint; KeyError if
+        the spec was pruned before the final rung or never in the grid)."""
+        fp = _canonical(spec).fingerprint()
+        for c in self.candidates:
+            if c.fingerprint == fp:
+                return c
+        raise KeyError(f"spec {fp} not in the final rung")
+
+    def pick(self, max_evals: Optional[float] = None) -> Candidate:
+        """Choose the tuned spec from the final rung.
+
+        ``max_evals`` caps mean distance evaluations per query (e.g. the
+        incumbent's budget, making the choice "best recall at equal-or-
+        fewer evals"); among eligible candidates the winner maximizes
+        recall, then minimizes evals, then build cost, with the spec
+        fingerprint as the final deterministic tie-break.  Raises
+        ``ValueError`` when no candidate fits the budget.
+        """
+        elig = [c for c in self.candidates
+                if max_evals is None
+                or c.objectives["evals_per_query"] <= max_evals]
+        if not elig:
+            raise ValueError(
+                f"no candidate within evals budget {max_evals}; frontier "
+                f"minimum is "
+                f"{min(c.objectives['evals_per_query'] for c in self.candidates)}"
+            )
+        return min(elig, key=_choice_order)
+
+    def artifact(self, choice: Optional[Candidate] = None) -> dict:
+        """Fingerprint-sealed tuned-spec artifact (``spec.tuned_artifact``)."""
+        choice = choice if choice is not None else self.pick()
+        return tuned_artifact(
+            choice.spec,
+            choice.objectives,
+            frontier=[(c.spec, c.objectives) for c in self.frontier],
+            calibration=self.calibration,
+            provenance={
+                "rungs": [dict(n=h["n"], n_queries=h["n_queries"],
+                               evaluated=len(h["evaluated"]),
+                               survivors=len(h["survivors"]))
+                          for h in self.history],
+                "grid_size": len(self.history[0]["evaluated"]),
+            },
+        )
+
+    def save(self, path: str, choice: Optional[Candidate] = None) -> dict:
+        """Write ``artifact(choice)`` as JSON; returns the artifact dict."""
+        import json
+
+        art = self.artifact(choice)
+        with open(path, "w") as f:
+            json.dump(art, f, indent=1)
+            f.write("\n")
+        return art
+
+
+def _choice_order(c: Candidate):
+    return (-c.objectives["recall"], c.objectives["evals_per_query"],
+            c.objectives["build_cost"], c.fingerprint)
+
+
+def _canonical(spec: RetrievalSpec) -> RetrievalSpec:
+    """Collapse knobs that cannot affect results so the grid deduplicates:
+    the adaptive policy varies the width in [1, frontier], so it is dead at
+    ``frontier == 1``, and ``patience`` is dead when ``adaptive`` is off."""
+    if spec.frontier <= 1 and spec.adaptive:
+        spec = spec.replace(adaptive=False)
+    if not spec.adaptive and spec.patience != 1:
+        spec = spec.replace(patience=1)
+    return spec
+
+
+def _build_key(spec: RetrievalSpec) -> tuple:
+    return tuple(str(getattr(spec, f)) for f in _BUILD_FIELDS)
+
+
+def _fold(key, *parts) -> jax.Array:
+    """Deterministically fold arbitrary hashables into a PRNG key."""
+    h = hashlib.sha256("\x1f".join(str(p) for p in parts).encode()).digest()
+    return jax.random.fold_in(key, int.from_bytes(h[:4], "big") % (2**31 - 1))
+
+
+def _rung_sizes(n: int, n_q: int, rungs: int, min_n: int, min_q: int):
+    """Geometric (database, query) subsample schedule ending at full size."""
+    out = []
+    for r in range(rungs):
+        shift = rungs - 1 - r
+        out.append((min(n, max(min_n, n >> shift)),
+                    min(n_q, max(min_q, n_q >> shift))))
+    # collapse rungs that saturated to the same size (tiny workloads)
+    dedup = []
+    for size in out:
+        if not dedup or size != dedup[-1]:
+            dedup.append(size)
+    return dedup
+
+
+def _evaluate_rung(specs: Sequence[RetrievalSpec], X, Q, k: int, key,
+                   verbose: bool, tag: str) -> list[Candidate]:
+    """Build (shared per build-group) + search + score every spec on (X, Q)."""
+    from .index import ANNIndex  # local: index imports spec, avoid a cycle
+
+    n = int(X.shape[0])
+    dist = specs[0].base_distance()
+    _, true_ids = knn_scan(dist, Q, X, k)
+    true_np = np.asarray(true_ids)
+
+    builds: dict[tuple, object] = {}
+    out = []
+    for spec in specs:
+        bk = _build_key(spec)
+        idx = builds.get(bk)
+        if idx is None:
+            idx = ANNIndex.build(X, spec=spec, key=_fold(key, "build", *bk))
+            builds[bk] = idx
+        search = idx.searcher(spec=spec)
+        _, ids, n_evals, _ = search(Q)
+        jax.block_until_ready(ids)
+        obj = {
+            "recall": round(recall_at_k(np.asarray(ids), true_np), 4),
+            "evals_per_query": round(float(np.mean(np.asarray(n_evals))), 1),
+            "build_cost": build_cost_proxy(spec, n),
+        }
+        out.append(Candidate(spec, obj))
+        if verbose:
+            print(f"[autotune/{tag}] {spec.build_policy} ef={spec.ef_search} "
+                  f"T={spec.frontier} wave={spec.wave} "
+                  f"adaptive={int(spec.adaptive)}/p{spec.patience}: "
+                  f"recall={obj['recall']:.4f} "
+                  f"evals={obj['evals_per_query']:.0f} "
+                  f"build~{obj['build_cost']:.0f}")
+    return out
+
+
+def autotune(X, Q, *, base: Optional[RetrievalSpec] = None,
+             axes: Optional[dict] = None,
+             anchors: Sequence[RetrievalSpec] = (),
+             k: int = 10, rungs: int = 3, keep: float = 0.4,
+             min_rung_n: int = 256, min_rung_q: int = 16,
+             seed: int = 0, verbose: bool = True) -> TuneResult:
+    """Successive-halving Pareto-frontier search over ``base.grid(**axes)``.
+
+    Args:
+        X: (n, m) database (full size — rungs subsample it internally).
+        Q: (B, m) calibration queries (a held-back sample of real traffic;
+            NOT the queries you later report held-out numbers on).
+        base: spec the axes pivot around (default ``RetrievalSpec(k=k)``).
+        axes: ``grid()`` axes; default ``default_axes()`` (blend alpha x
+            ef_search x frontier x wave x adaptive patience).
+        anchors: specs ALWAYS evaluated at every rung regardless of
+            dominance — e.g. the hand-tuned incumbent, so ``pick`` can
+            guarantee a tuned-vs-hand comparison on the final rung.
+        k: neighbors per query (recall@k is the quality objective).
+        rungs: subsample rungs (the last always runs at full size).
+        keep: survivor fraction cap per rung (successive halving).
+        min_rung_n / min_rung_q: floors for the subsample schedule.
+        seed: PRNG seed; fixed seed => identical promotion history,
+            frontier and choice.
+
+    Returns:
+        ``TuneResult`` — final-rung candidates, the Pareto frontier,
+        the per-rung promotion history and the calibration record.
+    """
+    base = base if base is not None else RetrievalSpec()
+    base = _canonical(base.replace(k=k))
+    axes = axes if axes is not None else default_axes()
+    key = jax.random.PRNGKey(seed)
+
+    X = np.asarray(X)
+    Q = np.asarray(Q)
+    n, n_q = int(X.shape[0]), int(Q.shape[0])
+
+    # resolve data-calibrated parameters ONCE against the full database so
+    # every evaluated spec is concrete and the artifact reproducible
+    dist = base.base_distance()
+    tau_cal = None
+
+    def _resolve(spec: RetrievalSpec) -> RetrievalSpec:
+        nonlocal tau_cal
+        changes = {}
+        for field in ("build_policy", "search_policy"):
+            pol = getattr(spec, field)
+            if pol.kind == "rankblend" and pol.tau is None:
+                if tau_cal is None:
+                    tau_cal = pol.resolve(dist, X).tau
+                changes[field] = dataclasses.replace(pol, tau=tau_cal)
+        return spec.replace(**changes) if changes else spec
+
+    survivors: list[RetrievalSpec] = []
+    seen = set()
+    for spec in list(base.grid(**axes)) + list(anchors):
+        spec = _resolve(_canonical(spec))
+        if spec.distance != base.distance:
+            raise ValueError("autotune sweeps one base distance at a time")
+        fp = spec.fingerprint()
+        if fp not in seen:
+            seen.add(fp)
+            survivors.append(spec)
+    anchor_fps = {_resolve(_canonical(a)).fingerprint() for a in anchors}
+
+    perm = np.asarray(jax.random.permutation(_fold(key, "perm"), n))
+    sizes = _rung_sizes(n, n_q, rungs, min_rung_n, min_rung_q)
+
+    history: list[dict] = []
+    cands: list[Candidate] = []
+    for r, (n_r, q_r) in enumerate(sizes):
+        final = r == len(sizes) - 1
+        X_r = X[perm[:n_r]] if not final else X
+        Q_r = Q[:q_r] if not final else Q
+        cands = _evaluate_rung(survivors, X_r, Q_r, k, _fold(key, "rung", r),
+                               verbose, f"rung{r} n={X_r.shape[0]}")
+        record = {"n": int(X_r.shape[0]), "n_queries": int(Q_r.shape[0]),
+                  "evaluated": [c.fingerprint for c in cands]}
+        if not final:
+            front = pareto_frontier(cands, maximize=MAXIMIZE,
+                                    minimize=MINIMIZE,
+                                    key=lambda c: c.objectives)
+            cap = max(4, math.ceil(len(cands) * keep))
+            promoted = sorted(front, key=_choice_order)[:cap]
+            kept = {c.fingerprint for c in promoted}
+            # anchors ride every rung: the bench's incumbent must reach the
+            # final rung even if a cheap proxy rung briefly dominates it
+            promoted += [c for c in cands
+                         if c.fingerprint in anchor_fps
+                         and c.fingerprint not in kept]
+            survivors = [c.spec for c in promoted]
+            record["survivors"] = [c.fingerprint for c in promoted]
+        else:
+            record["survivors"] = [c.fingerprint for c in cands]
+        history.append(record)
+        if verbose:
+            print(f"[autotune] rung {r}: {len(record['evaluated'])} evaluated "
+                  f"-> {len(record['survivors'])} promoted "
+                  f"(n={record['n']}, q={record['n_queries']})")
+
+    frontier = pareto_frontier(cands, maximize=MAXIMIZE, minimize=MINIMIZE,
+                               key=lambda c: c.objectives)
+    calibration = {
+        "n_db": n, "n_queries": n_q, "k": k, "distance": base.distance,
+        "seed": seed, "rungs": [list(s) for s in sizes],
+        "rankblend_tau": tau_cal,
+    }
+    return TuneResult(base=base, candidates=cands, frontier=frontier,
+                      history=history, calibration=calibration)

@@ -126,10 +126,26 @@ class ANNIndex:
         from the legacy kwargs (folded into an equivalent spec by the
         deprecation shim — bit-identical results).
 
-        ``dist`` may be passed explicitly (e.g. a ``ViewedDistance`` whose
-        role-dependent views the registry cannot name); otherwise it is
-        resolved from ``spec.distance``.  ``natural`` — optional callable
-        returning the distance-specific natural symmetrization (Eq. 4).
+        Args:
+            X: (n, m) database array (rows are points in the base
+                distance's native representation, e.g. histograms on the
+                simplex for KL).
+            dist: optional explicit base distance (e.g. a
+                ``ViewedDistance`` whose role-dependent views the registry
+                cannot name); otherwise resolved from ``spec.distance``.
+            spec: the ``RetrievalSpec`` scenario to build.  Data-calibrated
+                policies (``RankBlend`` with ``tau=None``) are resolved
+                against ``X`` here; the concrete parameters land in
+                ``build_info["index_sym_resolved"]`` /
+                ``["query_sym_resolved"]``.
+            key: PRNG key for the nndescent builder / entry sampling.
+            natural: optional callable returning the distance-specific
+                natural symmetrization (Eq. 4 of the paper).
+
+        Returns:
+            A built ``ANNIndex`` whose ``neighbors`` is the (n, M_max)
+            int32 adjacency and whose ``build_info`` records the resolved
+            scenario (spec dict + fingerprint, mean degree, engine).
 
         ``spec.capacity``: total slot budget for online mutation (inserted
         points consume slots).  Setting it makes the index mutable
@@ -157,8 +173,13 @@ class ANNIndex:
         if dist is None:
             dist = spec.base_distance()
 
-        build_dist = spec.bind_build(dist, natural=natural)
-        search_dist = (spec.bind_search(dist, natural=natural)
+        # resolve data-calibrated policy parameters (RankBlend tau=None)
+        # against the database ONCE; the spec itself stays as written so
+        # later spec-equality checks (searcher/scheduler) keep working
+        build_policy = spec.build_policy.resolve(dist, X)
+        search_policy = spec.search_policy.resolve(dist, X)
+        build_dist = build_policy.bind(dist, natural=natural)
+        search_dist = (search_policy.bind(dist, natural=natural)
                        if spec.needs_rerank else dist)
 
         if spec.builder == "swgraph":
@@ -192,6 +213,10 @@ class ANNIndex:
             wave=spec.wave if (spec.builder, spec.build_engine) == ("swgraph", "wave") else None,
             index_sym=str(spec.build_policy),
             query_sym=str(spec.search_policy),
+            # concrete policies actually bound (differ from the spec's only
+            # when a data-calibrated parameter was resolved at build time)
+            index_sym_resolved=str(build_policy),
+            query_sym_resolved=str(search_policy),
             NN=spec.NN,
             ef_construction=spec.ef_construction,
             mean_degree=float(jnp.mean(degrees.astype(jnp.float32))),

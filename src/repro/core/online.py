@@ -272,10 +272,13 @@ class OnlineIndex:
                    wave=32, frontier=4, rev_rounds=None, seed=0, spec=None):
         """Wrap a built ``(X, neighbors)`` graph in a mutable index.
 
-        ``capacity`` (default ``2 * n``) bounds the lifetime number of
-        inserted points (tombstoned slots are not reused).  Slot distances
-        are recomputed once from the build distance, so eviction decisions
-        after wrapping are identical to the ones the builder would make.
+        ``capacity`` (default ``2 * n``) bounds the number of SIMULTANEOUSLY
+        live points: tombstoned slots return to a free list and later
+        inserts recycle them (arena semantics — see ``insert``), so
+        steady-state insert/delete churn never exhausts the arena.  Slot
+        distances are recomputed once from the build distance, so eviction
+        decisions after wrapping are identical to the ones the builder
+        would make.
         """
         X = jnp.asarray(X)
         neighbors = jnp.asarray(neighbors, jnp.int32)
@@ -417,7 +420,9 @@ class OnlineIndex:
 
         Drops every edge into/out of dead nodes, then re-links each
         surviving node that was adjacent to a tombstone via a repair beam
-        search + reverse-edge merge.  Tombstoned slots stay retired.
+        search + reverse-edge merge.  Compaction never resurrects a
+        tombstone — dead slots stay on the free list until an insert
+        recycles them.
         """
         adj, adj_d, affected, n_dropped = _drop_dead_edges(
             self.adj, self.adj_d, self.alive, jnp.int32(self.n_total)

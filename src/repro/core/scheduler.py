@@ -38,6 +38,15 @@ while queries are in flight.  Newly admitted queries see the current
 ``alive`` mask; in-flight beams keep their admission-time view, and retire
 results are re-masked against the CURRENT ``alive`` so a point deleted
 mid-flight never reaches a response.
+
+Rerank scenarios (since the ``RetrievalSpec`` API): a spec with
+``search_policy != none`` is served end-to-end — the slots' beams run
+under the BOUND search policy (``dist`` here is already the bound
+distance) and each retired request's best ``k_c`` candidates are
+re-ranked under the original distance via ``rerank_fn`` before the
+``SlotResult`` is emitted, with the ``k_c`` extra evaluations counted
+into ``n_evals``.  Results match ``ANNIndex.searcher()`` on the same
+spec; ``ANNIndex.scheduler(spec=...)`` wires all of this up.
 """
 
 from __future__ import annotations
@@ -293,7 +302,12 @@ class SlotScheduler:
     # -------------------------------------------------------------- serving
 
     def submit(self, q, rid: Optional[int] = None, t_arrival: float = 0.0) -> int:
-        """Enqueue one query row; returns its request id."""
+        """Enqueue one query row ``q`` of shape (dim,).
+
+        ``rid`` (optional) names the request; auto-assigned from a counter
+        otherwise.  ``t_arrival`` is echoed into the eventual
+        ``SlotResult`` for latency accounting.  Returns the request id.
+        """
         if rid is None:
             rid = next(self._rid_gen)
         self._queue.append((int(rid), np.asarray(q), float(t_arrival)))

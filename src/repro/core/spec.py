@@ -64,7 +64,7 @@ class DistancePolicy:
 
     kind: str
     alpha: Optional[float] = None  # blend / rankblend mix weight
-    tau: Optional[float] = None  # rankblend proxy scale
+    tau: Optional[float] = None  # rankblend proxy scale; None = data-calibrated
 
     def __post_init__(self):
         if self.kind not in POLICY_KINDS:
@@ -77,11 +77,8 @@ class DistancePolicy:
         if self.kind == "blend" and self.tau is not None:
             # silently dropping it would break parse(str(p)) == p
             raise ValueError("blend takes no tau")
-        if self.kind == "rankblend":
-            if self.tau is None:
-                object.__setattr__(self, "tau", 1.0)
-            elif self.tau <= 0:
-                raise ValueError(f"rankblend needs tau > 0, got {self.tau}")
+        if self.kind == "rankblend" and self.tau is not None and self.tau <= 0:
+            raise ValueError(f"rankblend needs tau > 0, got {self.tau}")
 
     # -- identity ------------------------------------------------------------
 
@@ -95,6 +92,8 @@ class DistancePolicy:
         if self.kind == "blend":
             return f"blend({self.alpha!r})"
         if self.kind == "rankblend":
+            if self.tau is None:  # data-calibrated at bind/resolve time
+                return f"rankblend({self.alpha!r})"
             return f"rankblend({self.alpha!r},{self.tau!r})"
         return self.kind
 
@@ -124,12 +123,35 @@ class DistancePolicy:
 
     # -- lowering ------------------------------------------------------------
 
-    def bind(self, base, natural: Optional[Callable] = None):
+    def resolve(self, base=None, data=None) -> "DistancePolicy":
+        """Make any data-calibrated parameter concrete.
+
+        Only ``rankblend`` with ``tau=None`` resolves today: given ``base``
+        and a database sample ``data``, tau becomes the median
+        reversed-distance scale (``symmetrize.calibrate_tau`` — deterministic
+        in the data); without data it falls back to the historical fixed
+        constant 1.0.  Every other policy returns itself unchanged, so
+        ``resolve`` is idempotent and safe to call unconditionally.
+        """
+        if self.kind == "rankblend" and self.tau is None:
+            from .symmetrize import calibrate_tau
+
+            tau = (calibrate_tau(base, data)
+                   if base is not None and data is not None else 1.0)
+            return dataclasses.replace(self, tau=tau)
+        return self
+
+    def bind(self, base, natural: Optional[Callable] = None, data=None):
         """Lower the policy over ``base``, returning a PairDistance.
 
         The exact special cases of ``Blend`` lower to the dedicated legacy
         wrappers so ``Blend(0.5)`` is bit-identical to ``avg``, ``Blend(0)``
         to ``reverse`` and ``Blend(1)`` to the original distance.
+
+        ``data`` — optional (n, m) database sample used to ``resolve``
+        data-calibrated parameters (RankBlend tau) before lowering; an
+        explicit ``tau=`` always wins and reproduces the old fixed-constant
+        behavior bit-for-bit.
         """
         if self.kind in SYM_MODES:
             return symmetrized(base, self.kind, natural=natural)
@@ -143,7 +165,8 @@ class DistancePolicy:
             if self.alpha == 0.0:
                 return reverse_of(base)
             return CombinedDistance(base, "blend", alpha=self.alpha)
-        return CombinedDistance(base, "rankblend", alpha=self.alpha, tau=self.tau)
+        p = self.resolve(base, data)
+        return CombinedDistance(base, "rankblend", alpha=p.alpha, tau=p.tau)
 
 
 def Blend(alpha: float) -> DistancePolicy:  # noqa: N802 - combinator constructor
@@ -156,9 +179,18 @@ def MaxSym() -> DistancePolicy:  # noqa: N802
     return DistancePolicy("max")
 
 
-def RankBlend(alpha: float, tau: float = 1.0) -> DistancePolicy:  # noqa: N802
-    """Convex mix of d(u,v) with a monotone proxy of the reversed rank."""
-    return DistancePolicy("rankblend", alpha=float(alpha), tau=float(tau))
+def RankBlend(alpha: float, tau: Optional[float] = 1.0) -> DistancePolicy:  # noqa: N802
+    """Convex mix of d(u,v) with a monotone proxy of the reversed rank.
+
+    ``tau`` sets the scale where the reversed-distance proxy switches from
+    linear to logarithmic compression.  The default keeps the historical
+    fixed constant 1.0; pass ``tau=None`` (serialized ``"rankblend(a)"``)
+    for the DATA-CALIBRATED tau — the median reversed-distance scale of the
+    database sample supplied at bind time (``calibrate_tau``), falling back
+    to 1.0 when no data is available.
+    """
+    return DistancePolicy("rankblend", alpha=float(alpha),
+                          tau=None if tau is None else float(tau))
 
 
 NONE_POLICY = DistancePolicy("none")
@@ -246,13 +278,22 @@ class RetrievalSpec:
 
         return get_distance(self.distance)
 
-    def bind_build(self, base=None, natural: Optional[Callable] = None):
-        base = base if base is not None else self.base_distance()
-        return self.build_policy.bind(base, natural=natural)
+    def bind_build(self, base=None, natural: Optional[Callable] = None,
+                   data=None):
+        """Lower ``build_policy`` over the base distance (graph construction).
 
-    def bind_search(self, base=None, natural: Optional[Callable] = None):
+        ``data`` — optional database sample forwarded to
+        ``DistancePolicy.bind`` so data-calibrated parameters (auto
+        RankBlend tau) resolve against the corpus being indexed.
+        """
         base = base if base is not None else self.base_distance()
-        return self.search_policy.bind(base, natural=natural)
+        return self.build_policy.bind(base, natural=natural, data=data)
+
+    def bind_search(self, base=None, natural: Optional[Callable] = None,
+                    data=None):
+        """Lower ``search_policy`` over the base distance (beam guidance)."""
+        base = base if base is not None else self.base_distance()
+        return self.search_policy.bind(base, natural=natural, data=data)
 
     @property
     def needs_rerank(self) -> bool:
@@ -313,3 +354,145 @@ class RetrievalSpec:
         for combo in itertools.product(*(axes[n] for n in names)):
             out.append(self.replace(**dict(zip(names, combo))))
         return out
+
+
+# ---------------------------------------------------------------------------
+# Pareto dominance / frontier helpers (the auto-tuner's objective algebra)
+# ---------------------------------------------------------------------------
+
+
+def dominates(a: dict, b: dict, *, maximize=(), minimize=()) -> bool:
+    """True iff objective point ``a`` Pareto-dominates ``b``.
+
+    ``a`` dominates ``b`` when it is at least as good on EVERY listed
+    objective (``maximize`` keys: higher is better; ``minimize`` keys:
+    lower is better) and strictly better on at least one.  Points are
+    plain dicts so the helper serves hand-built test points, bench rows
+    and ``autotune`` candidates alike.  Missing keys raise ``KeyError`` —
+    a silent default would make an incomparable point look dominated.
+    """
+    if not maximize and not minimize:
+        raise ValueError("dominates() needs at least one objective key")
+    as_good = all(a[m] >= b[m] for m in maximize) and all(
+        a[m] <= b[m] for m in minimize
+    )
+    strictly = any(a[m] > b[m] for m in maximize) or any(
+        a[m] < b[m] for m in minimize
+    )
+    return as_good and strictly
+
+
+def pareto_frontier(points, *, maximize=(), minimize=(), key=None) -> list:
+    """Non-dominated subset of ``points``, input order preserved.
+
+    ``key(point) -> dict`` extracts the objective dict (identity by
+    default, so plain dicts work directly).  Ties on every objective keep
+    ALL tied points — neither dominates the other.  O(n^2) pairwise scan:
+    tuner frontiers are tens of points, not millions.
+    """
+    key = key if key is not None else (lambda p: p)
+    objs = [key(p) for p in points]
+    out = []
+    for i, p in enumerate(points):
+        if not any(
+            dominates(objs[j], objs[i], maximize=maximize, minimize=minimize)
+            for j in range(len(points))
+            if j != i
+        ):
+            out.append(p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tuned-spec artifact: the auto-tuner's output, consumable by serve/build
+# ---------------------------------------------------------------------------
+
+# schema version ships in every artifact so loaders can reject a future
+# incompatible layout instead of mis-parsing it
+TUNED_ARTIFACT_KIND = "repro.autotune/tuned-spec@1"
+
+
+def tuned_artifact(spec: "RetrievalSpec", objectives: dict, *, frontier=(),
+                   calibration: Optional[dict] = None,
+                   provenance: Optional[dict] = None) -> dict:
+    """Assemble the tuned-spec JSON artifact (fingerprint provenance inside).
+
+    Args:
+        spec: the chosen tuned ``RetrievalSpec`` (fully concrete — the
+            tuner resolves data-calibrated parameters before choosing).
+        objectives: the chosen spec's measured objectives
+            (``recall`` / ``evals_per_query`` / ``build_cost``).
+        frontier: iterable of ``(spec, objectives)`` pairs — the full
+            Pareto frontier the choice was made from.
+        calibration: workload/sample description the tuner ran on.
+        provenance: tool metadata (grid size, rungs, seed).
+
+    Returns:
+        A JSON-serializable dict.  ``spec_fingerprint`` is recorded next to
+        the spec itself so a hand-edited artifact is rejected at load time
+        (``load_tuned_artifact``) instead of silently serving a scenario
+        that was never tuned.
+    """
+    return {
+        "kind": TUNED_ARTIFACT_KIND,
+        "tuned_spec": spec.to_dict(),
+        "spec_fingerprint": spec.fingerprint(),
+        "objectives": dict(objectives),
+        "frontier": [
+            {"spec": s.to_dict(), "spec_fingerprint": s.fingerprint(), **o}
+            for s, o in frontier
+        ],
+        "calibration": dict(calibration or {}),
+        "provenance": {"tool": "repro.core.autotune", **(provenance or {})},
+    }
+
+
+def load_tuned_artifact(src) -> tuple["RetrievalSpec", dict]:
+    """Load a tuned-spec artifact from a path / JSON string / parsed dict.
+
+    Returns ``(spec, artifact_dict)``.  Raises ``ValueError`` when the
+    ``kind`` tag is unknown or the recorded ``spec_fingerprint`` does not
+    match the embedded spec — the fingerprint is the artifact's provenance
+    seal, so any edit to the spec must go through re-tuning (or an
+    explicit plain-spec JSON, which carries no tuning claim).
+    """
+    if isinstance(src, dict):
+        doc = src
+    else:
+        if "{" not in src:
+            with open(src) as f:
+                src = f.read()
+        doc = json.loads(src)
+    kind = doc.get("kind")
+    if kind != TUNED_ARTIFACT_KIND:
+        raise ValueError(
+            f"not a tuned-spec artifact (kind={kind!r}; "
+            f"expected {TUNED_ARTIFACT_KIND!r})"
+        )
+    spec = RetrievalSpec.from_dict(doc["tuned_spec"])
+    if spec.fingerprint() != doc.get("spec_fingerprint"):
+        raise ValueError(
+            f"tuned-spec fingerprint mismatch: artifact says "
+            f"{doc.get('spec_fingerprint')!r} but the embedded spec hashes "
+            f"to {spec.fingerprint()!r} — the artifact was edited after "
+            f"tuning; re-run the tuner or pass a plain spec JSON instead"
+        )
+    return spec, doc
+
+
+def load_spec(src) -> "RetrievalSpec":
+    """Load a ``RetrievalSpec`` from EITHER serialized form.
+
+    Accepts a path or JSON string holding a plain spec (``to_json`` output)
+    or a tuned-spec artifact (``tuned_artifact`` output, fingerprint
+    verified) — the single entry point ``launch/serve.py --spec`` uses, so
+    the tuner's output file is directly servable.
+    """
+    if not isinstance(src, dict):
+        if "{" not in src:
+            with open(src) as f:
+                src = f.read()
+        src = json.loads(src)
+    if src.get("kind") == TUNED_ARTIFACT_KIND:
+        return load_tuned_artifact(src)[0]
+    return RetrievalSpec.from_dict(src)

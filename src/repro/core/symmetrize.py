@@ -297,6 +297,49 @@ class CombinedDistance:
 
 
 # ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+
+def calibrate_tau(base, X, *, max_rows: int = 256) -> float:
+    """Data-calibrated ``RankBlend`` proxy scale: median reversed-distance.
+
+    The ``rankblend`` proxy ``tau * sign(x) * log1p(|x| / tau)`` switches
+    from near-linear to logarithmic compression around ``|x| ~ tau``, so
+    ``tau`` should sit at the TYPICAL scale of the reversed distance — not
+    at the hand-tuned constant 1.0, which is only right when the workload
+    happens to produce O(1) divergences.  This estimates that scale as the
+    median of ``|d(v, u)|`` over all ordered pairs of an evenly-strided
+    sample of ``X`` (at most ``max_rows`` rows, one ``matrix`` call).
+
+    Args:
+        base: any PairDistance (the distance being rank-blended).
+        X: (n, m) database sample to calibrate against.
+        max_rows: sample-size cap; the estimate is deterministic (strided,
+            no RNG) so the same data always yields the same tau.
+
+    Returns:
+        The median reversed-distance magnitude as a positive float; falls
+        back to 1.0 (the historical fixed constant) when the sample is
+        degenerate (fewer than 2 rows, all-zero, or non-finite median).
+    """
+    X = jnp.asarray(X)
+    n = int(X.shape[0])
+    if n < 2:
+        return 1.0
+    stride = max(1, n // max_rows)
+    S = X[::stride][:max_rows]
+    m = int(S.shape[0])
+    # d(v, u) over the sample: same multiset as the transposed forward matrix
+    D = base.matrix(S, S).T
+    off = ~jnp.eye(m, dtype=bool)
+    med = float(jnp.median(jnp.abs(D[off])))
+    if not (med > 0.0 and jnp.isfinite(med)):
+        return 1.0
+    return med
+
+
+# ---------------------------------------------------------------------------
 # factory
 # ---------------------------------------------------------------------------
 

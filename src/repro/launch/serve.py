@@ -402,11 +402,13 @@ def build_and_serve(*, spec: RetrievalSpec | None = None,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--spec", default=None,
-                    help="path to a RetrievalSpec JSON file; fully defines "
-                         "the retrieval scenario (distance, build/search "
-                         "policies, builder/engine/scheduler knobs) — the "
-                         "remaining flags keep workload/traffic control and "
-                         "may not be combined with it")
+                    help="path to a RetrievalSpec JSON file OR an autotune "
+                         "tuned-spec artifact (bench_autotune / "
+                         "TuneResult.save — verified by fingerprint); fully "
+                         "defines the retrieval scenario (distance, "
+                         "build/search policies, builder/engine/scheduler "
+                         "knobs) — the remaining flags keep workload/traffic "
+                         "control and may not be combined with it")
     # scenario flags: default None so an explicit use can be detected and
     # rejected when --spec already defines the scenario (a silently-ignored
     # --ef would make the user believe they swept something they didn't)
@@ -468,7 +470,11 @@ def main(argv=None):
         clash = sorted(k for k, v in scenario.items() if v is not None)
         if clash:
             ap.error(f"--spec defines the scenario; conflicting flags: {clash}")
-        spec = RetrievalSpec.from_json(args.spec)
+        from repro.core import load_spec
+
+        # accepts both a plain RetrievalSpec JSON and a tuned-spec artifact
+        # (kind "repro.autotune/tuned-spec@1", fingerprint-verified)
+        spec = load_spec(args.spec)
     return build_and_serve(
         spec=spec,
         n_db=args.n_db, dim=args.dim, n_queries=args.queries,

@@ -214,6 +214,46 @@ def test_spec_schema_gates_blend_sweep_recall_and_eval_reduction():
     assert not failures
 
 
+def _autotune_doc():
+    return {
+        "hand": {"recall@10": 0.9854, "evals_per_query": 406.6,
+                 "spec_fingerprint": "5998cabb1169"},
+        "tuned": {"recall@10": 0.9854, "evals_per_query": 406.6,
+                  "eval_headroom": 1.0, "spec_fingerprint": "5998cabb1169"},
+    }
+
+
+def test_autotune_schema_gates_tuned_recall_and_eval_headroom():
+    """The tuner must keep matching/beating the hand anchor: a tuned-spec
+    recall drop fails, and a shrinking eval_headroom (tuned spec getting
+    more expensive relative to the hand spec) fails as a ratio."""
+    fresh = _autotune_doc()
+    fresh["tuned"]["recall@10"] -= 0.01
+    _, failures, _ = compare(_autotune_doc(), fresh, qps_tol=0.2,
+                             recall_tol=0.005)
+    assert [(f["section"], f["metric"]) for f in failures] == [
+        ("tuned", "recall@10")
+    ]
+    fresh = _autotune_doc()
+    fresh["tuned"]["eval_headroom"] = 0.7  # tuned now costs MORE than hand
+    _, failures, cal = compare(_autotune_doc(), fresh, qps_tol=0.2,
+                               recall_tol=0.005, calibrate=True)
+    assert [f["metric"] for f in failures] == ["eval_headroom"]
+    assert cal == 1.0  # calibration=None schema
+    # the hand anchor's own recall is gated too (workload drift detector)
+    fresh = _autotune_doc()
+    fresh["hand"]["recall@10"] -= 0.02
+    _, failures, _ = compare(_autotune_doc(), fresh, qps_tol=0.2,
+                             recall_tol=0.005)
+    assert [(f["section"], f["metric"]) for f in failures] == [
+        ("hand", "recall@10")
+    ]
+    # within tolerance: quiet
+    _, failures, _ = compare(_autotune_doc(), _autotune_doc(), qps_tol=0.2,
+                             recall_tol=0.005)
+    assert not failures
+
+
 def test_only_matching_configs_compared():
     fresh = _engine_doc()
     fresh["batched_frontier"] = fresh["batched_frontier"][:1]  # quick-mode subset

@@ -1,0 +1,91 @@
+"""Docs lint: the README + docs/ reference graph stays alive.
+
+Runs ``tools/check_docs.py`` over the repo (the same check the docs-lint
+CI job runs) and unit-tests the checker's failure modes on synthetic docs
+so a future refactor of the checker can't silently stop detecting dead
+links or stale module references.
+"""
+
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+from check_docs import check_docs, check_file  # noqa: E402
+
+
+def test_repo_docs_have_no_dead_references():
+    problems = check_docs(ROOT)
+    assert problems == []
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    guides = ["architecture.md", "spec-reference.md", "tuning.md",
+              "benchmarks.md"]
+    for g in guides:
+        assert (ROOT / "docs" / g).is_file(), f"docs/{g} missing"
+    readme = (ROOT / "README.md").read_text()
+    for g in guides:
+        assert f"docs/{g}" in readme, f"README does not link docs/{g}"
+
+
+@pytest.fixture()
+def fake_repo(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "core" / "spec.py").write_text(
+        "class RetrievalSpec: pass\n")
+    (tmp_path / "docs" / "real.md").write_text("# hi\n")
+    return tmp_path
+
+
+def _problems(root, body):
+    md = root / "docs" / "page.md"
+    md.write_text(body)
+    return check_file(md, root)
+
+
+def test_checker_flags_dead_relative_link(fake_repo):
+    assert _problems(fake_repo, "see [x](missing.md)")
+    assert not _problems(fake_repo, "see [x](real.md)")
+    # anchors and external links are skipped
+    assert not _problems(fake_repo, "[a](#sec) [b](https://e.invalid/x.md)")
+
+
+def test_checker_flags_stale_module_and_attr(fake_repo):
+    assert not _problems(fake_repo, "use `repro.core.spec.RetrievalSpec`")
+    assert _problems(fake_repo, "use `repro.core.gone_module`")
+    assert _problems(fake_repo, "use `repro.core.spec.RenamedAway`")
+
+
+def test_checker_flags_missing_files_and_bench_artifacts(fake_repo):
+    assert _problems(fake_repo, "run `scripts/nope.py`")
+    assert _problems(fake_repo, "see `BENCH_missing.json`")
+    (fake_repo / "BENCH_real.json").write_text("{}")
+    assert not _problems(fake_repo, "see `BENCH_real.json` / `BENCH_real`")
+    # globs and placeholders are not concrete references
+    assert not _problems(fake_repo, "`BENCH_*.json` `BENCH_<name>.json`")
+
+
+def test_checker_ignores_fenced_code_blocks(fake_repo):
+    body = "```bash\npython scripts/nope.py out.json\n```\n"
+    assert not _problems(fake_repo, body)
+
+
+def test_cli_exit_codes(fake_repo):
+    (fake_repo / "README.md").write_text("[dead](gone.md)")
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py"),
+         "--root", str(fake_repo)],
+        capture_output=True, text=True)
+    assert r.returncode == 1 and "dead link" in r.stderr
+    (fake_repo / "README.md").write_text("fine\n")
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py"),
+         "--root", str(fake_repo)],
+        capture_output=True, text=True)
+    assert r.returncode == 0

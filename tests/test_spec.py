@@ -218,6 +218,77 @@ def test_build_info_records_spec_fingerprint(data):
     assert idx.online.spec == spec
 
 
+# ---------------------------------------------------------------------------
+# data-calibrated RankBlend tau (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+def test_rankblend_tau_none_means_auto_and_roundtrips():
+    p = RankBlend(0.6, tau=None)
+    assert p.tau is None
+    assert str(p) == "rankblend(0.6)"
+    assert DistancePolicy.parse("rankblend(0.6)") == p
+    # the function DEFAULT keeps the historical fixed scale: existing specs
+    # and their fingerprints are untouched by the auto-tau feature
+    assert RankBlend(0.6).tau == 1.0
+    assert str(RankBlend(0.6)) == "rankblend(0.6,1.0)"
+
+
+def test_rankblend_explicit_tau_bit_parity(data):
+    """Explicit ``tau=`` reproduces the pre-calibration behavior bit-for-bit
+    (the old code always bound the fixed scale constant)."""
+    Q, db = data
+    from repro.core.symmetrize import CombinedDistance
+
+    dist = get_distance("kl")
+    ref = CombinedDistance(dist, "rankblend", alpha=0.6, tau=1.0)
+    for p in (RankBlend(0.6), RankBlend(0.6, tau=1.0)):
+        bound = p.bind(dist)
+        assert bound == ref
+        np.testing.assert_array_equal(np.asarray(ref.matrix(Q, db)),
+                                      np.asarray(bound.matrix(Q, db)))
+
+
+def test_rankblend_tau_auto_calibrates_from_data(data):
+    _, db = data
+    from repro.core.symmetrize import calibrate_tau
+
+    dist = get_distance("kl")
+    expected = calibrate_tau(dist, db)
+    assert expected > 0.0 and expected != 1.0
+    # deterministic: same data, same scale
+    assert calibrate_tau(dist, db) == expected
+    p = RankBlend(0.6, tau=None)
+    assert p.resolve(dist, db).tau == pytest.approx(expected)
+    bound = p.bind(dist, data=db)
+    assert bound.tau == pytest.approx(expected)
+    # no calibration data: the fixed historical scale is the fallback
+    assert p.resolve(dist, None).tau == 1.0
+    assert p.bind(dist).tau == 1.0
+    # explicit tau is never overridden by resolution
+    assert RankBlend(0.6, tau=2.5).resolve(dist, db).tau == 2.5
+
+
+def test_build_resolves_auto_tau_but_spec_stays_unresolved(data):
+    """``ANNIndex.build`` calibrates tau against X, records the concrete
+    policy in build_info, and keeps the spec AS WRITTEN so later
+    ``searcher(spec=...)`` calls with the same auto-tau spec still match."""
+    Q, db = data
+    spec = RetrievalSpec(distance="kl", search_policy=RankBlend(0.6, tau=None),
+                         k_c=24, builder="nndescent", NN=10, nnd_iters=4)
+    idx = ANNIndex.build(db, spec=spec, key=jax.random.PRNGKey(2))
+    assert idx.build_info["query_sym"] == "rankblend(0.6)"
+    resolved = idx.build_info["query_sym_resolved"]
+    assert resolved.startswith("rankblend(0.6,") and resolved != "rankblend(0.6)"
+    from repro.core.symmetrize import calibrate_tau
+
+    assert idx.search_dist.tau == pytest.approx(
+        calibrate_tau(get_distance("kl"), db))
+    # the unresolved spec keeps matching the bound index
+    d, ids, _, _ = idx.searcher(spec=spec.replace(ef_search=48))(Q)
+    assert ids.shape == (N_Q, K)
+
+
 def test_blend_build_policy_end_to_end_recall(data):
     """A graph built under Blend(0.25) serves the ORIGINAL distance well —
     the paper's construction-distance research line through the spec API."""

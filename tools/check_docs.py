@@ -1,0 +1,146 @@
+"""Docs lint: dead links and stale references in README + docs/.
+
+    python tools/check_docs.py [--root .]
+
+Checks, over every ``README.md`` and ``docs/*.md``:
+
+  * relative markdown links ``[text](target)`` resolve to an existing file
+    or directory (http(s)/mailto/#anchor targets are skipped, fragments
+    stripped);
+  * inline-code references to ``BENCH_*`` artifacts name a committed file
+    (repo root or ``benchmarks/baselines/``);
+  * inline-code path references (``benchmarks/compare_bench.py``,
+    ``tests/test_spec.py::test_name``, ``launch/serve.py``) exist —
+    resolved against the repo root, then ``src/``, then ``src/repro/``;
+  * inline-code dotted module references (``repro.core.autotune``,
+    ``repro.core.spec.RetrievalSpec``) resolve to a module under ``src/``,
+    and any trailing attribute actually appears in that module's source —
+    so renaming or removing a documented API fails the docs job instead of
+    leaving a stale pointer.
+
+Spans containing ``*`` are treated as globs and skipped.  Fenced code
+blocks are not scanned (shell examples reference files the reader is about
+to create).  Exit status 1 when any problem is found; stdlib only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SPAN_RE = re.compile(r"`([^`\n]+)`")
+FENCE_RE = re.compile(r"^(```|~~~)")
+PATH_RE = re.compile(r"\.?[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|json|md|yml|toml)")
+MODULE_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+BENCH_RE = re.compile(r"\bBENCH_[A-Za-z0-9_]+\b")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def _strip_fences(text: str) -> str:
+    """Blank out fenced code blocks, preserving line structure."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line.strip()):
+            fenced = not fenced
+            out.append("")
+        else:
+            out.append("" if fenced else line)
+    return "\n".join(out)
+
+
+def _module_file(root: pathlib.Path, dotted: str):
+    """Longest dotted prefix that is a module under src/; returns
+    (path, remainder_attrs) or (None, None)."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        base = root / "src" / pathlib.Path(*parts[:cut])
+        for cand in (base.with_suffix(".py"), base / "__init__.py"):
+            if cand.is_file():
+                return cand, parts[cut:]
+    return None, None
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+    problems = []
+    rel = md.relative_to(root)
+    text = _strip_fences(md.read_text())
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists() and not (root / path).exists():
+            problems.append(f"{rel}: dead link [{target}]")
+
+    for span in SPAN_RE.findall(text):
+        if "*" in span or "<" in span:
+            continue  # glob / placeholder pattern, not a concrete reference
+
+        for cand in PATH_RE.findall(span):
+            cand = cand.split("::", 1)[0]
+            if BENCH_RE.search(cand):
+                continue  # bench artifacts get their own multi-root lookup
+            if not any((base / cand).exists()
+                       for base in (root, root / "src", root / "src/repro")):
+                problems.append(f"{rel}: missing file reference `{cand}`")
+
+        for dotted in MODULE_RE.findall(span):
+            mod, attrs = _module_file(root, dotted)
+            if mod is None:
+                problems.append(f"{rel}: unresolvable module `{dotted}`")
+                continue
+            if attrs:
+                token = re.split(r"[^A-Za-z0-9_]", attrs[0])[0]
+                if token and token not in mod.read_text():
+                    problems.append(
+                        f"{rel}: `{dotted}` — {token!r} not found in "
+                        f"{mod.relative_to(root)}"
+                    )
+
+        for bench in BENCH_RE.findall(span):
+            name = bench if bench.endswith(".json") else None
+            hits = [
+                root / f"{bench}.json",
+                root / bench,
+                root / "benchmarks/baselines" / f"{bench}.quick.json",
+            ]
+            if name:
+                hits.append(root / "benchmarks/baselines" / name)
+            if not any(h.exists() for h in hits):
+                problems.append(f"{rel}: unknown bench artifact `{bench}`")
+
+    return problems
+
+
+def check_docs(root: pathlib.Path) -> list[str]:
+    files = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    problems = []
+    for md in files:
+        if md.is_file():
+            problems.extend(check_file(md, root))
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".", help="repository root")
+    args = ap.parse_args(argv)
+    problems = check_docs(pathlib.Path(args.root).resolve())
+    for p in problems:
+        print(p, file=sys.stderr)
+    if problems:
+        print(f"docs lint: {len(problems)} problem(s)", file=sys.stderr)
+        return 1
+    print("docs lint: all references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
