@@ -33,6 +33,19 @@ adaptive eval reduction (relative tolerance).  Latency percentiles in ms
 are recorded for the README table.  Results land in BENCH_serve.json
 (self-described by the served RetrievalSpec fingerprint); CI compares the
 quick run against benchmarks/baselines/BENCH_serve.quick.json.
+
+``run_overload`` is the SLO-aware admission sweep (``compare_bench.py``
+"overload" schema): one index, utilization swept from well below to well
+past the scheduler's capacity on a DETERMINISTIC virtual clock (every tick
+costs ``TICK_COST``, so capacity is exact and the sweep is reproducible),
+each point served twice over the identical two-tenant / two-class Poisson
+trace — once FIFO (no admission control), once through the admission
+controller with a demotion ladder and load shedding.  Gated per point: in-SLO fraction of the admission run (abs
+tolerance) and goodput as a fraction of the sweep's peak goodput (relative
+tolerance) — both machine-independent.  The bench itself hard-asserts
+graceful degradation at supercritical load (in-SLO >= 2x FIFO, goodput
+within 10%% of peak).  Results land in BENCH_overload.json; CI compares
+the quick run against benchmarks/baselines/BENCH_overload.quick.json.
 """
 
 from __future__ import annotations
@@ -44,10 +57,13 @@ import jax
 import numpy as np
 
 from repro.core import ANNIndex, RetrievalSpec, knn_scan, recall_at_k
+from repro.core.spec import demotion_ladder
 from repro.data.synthetic import lda_like_histograms, split_queries
 from repro.launch.serve import (
     latency_stats,
+    multi_tenant_arrivals,
     poisson_arrivals,
+    qos_summary,
     simulate_dynamic_batches,
     simulate_static_batches,
 )
@@ -59,6 +75,35 @@ UTIL = 0.3  # offered load as a fraction of measured static capacity
 REPEATS = 3  # serve the trace in (static, continuous) PAIRS, keep the best
 # pair ratio: host-speed drift between phases hits both disciplines of a
 # pair equally, so the gated speedup is stable even on noisy runners
+
+# -- overload sweep (run_overload): the clock is DETERMINISTIC — every
+# scheduler tick costs TICK_COST virtual seconds (the lock-step tick runs
+# full-batch compute regardless of occupancy, so a constant cost is
+# faithful), capacity is probed on the same clock, and utilization is a
+# fraction of that exact capacity.  Sub/supercritical points are therefore
+# exactly sub/supercritical on any runner — the sweep measures admission
+# POLICY, not host speed (wall-clock latency is run_serve's job).  Few
+# slots + a tight SLO make the FIFO baseline's queue blow its budget
+# within a short CI trace; 1.2 and 1.5 are the supercritical points the
+# graceful-degradation asserts apply at (1.5 is deep enough that class 0
+# alone oversubscribes the server, so the DYNAMIC demotion path engages;
+# at 1.2 the class-1 base demotion and shedding absorb most of it).
+OVERLOAD_UTILS_QUICK = (0.3, 0.7, 1.2, 1.5)
+OVERLOAD_UTILS = (0.3, 0.6, 0.9, 1.2, 1.5)
+OVERLOAD_SLOTS = 16
+TICK_COST = 1e-3  # one virtual millisecond per scheduler tick
+SLO_MULT = 2.0  # SLO budget as a multiple of the measured per-request service
+# planning slack over the learned mean service time: admitting on the bare
+# mean sends ~half the marginal admits past their SLO (service disperses
+# around the mean), wasting slot time a demotion or shed would have saved —
+# 1.5 keeps deep-overload goodput within 10% of peak; 2.0 over-demotes
+# (rung 0 goes unused at full load)
+ADMISSION_MARGIN = 1.5
+OVERLOAD_TENANTS = 2
+# class 0 (full fidelity) / class 1 (starts one rung demoted).  The small
+# class-1 share keeps util 1.2 genuinely supercritical even after its base
+# demotion, so the admission controller's DYNAMIC demotion path engages.
+PRIORITY_MIX = (0.85, 0.15)
 
 
 def run_serve(out_path: str = "BENCH_serve.json", quick: bool = False):
@@ -197,5 +242,140 @@ def run_serve(out_path: str = "BENCH_serve.json", quick: bool = False):
     return result
 
 
+def run_overload(out_path: str = "BENCH_overload.json", quick: bool = False):
+    """Overload sweep: SLO-aware admission control vs FIFO, util 0.3 -> 1.2."""
+    n, n_req, dim = (1536, 288, 32) if quick else (3072, 384, 32)
+    utils = OVERLOAD_UTILS_QUICK if quick else OVERLOAD_UTILS
+    key = jax.random.PRNGKey(0)
+    data = lda_like_histograms(key, n + n_req, dim)
+    Q, db = split_queries(data, n_req, jax.random.fold_in(key, 1))
+    spec = RetrievalSpec(distance="kl", builder="swgraph", build_engine="wave",
+                         wave=WAVE, NN=NN, ef_construction=EF_C, k=K,
+                         ef_search=EF_S, frontier=STATIC_FRONTIER,
+                         slots=OVERLOAD_SLOTS, sched_frontier=CONT_FRONTIER,
+                         steps_per_sync=STEPS_PER_SYNC)
+    Qn = np.asarray(Q)
+    idx = ANNIndex.build(db, spec=spec, key=jax.random.fold_in(key, 2))
+
+    # -- closed-batch capacity probe on the FIFO scheduler, on the
+    # deterministic tick clock: max t_done is the exact drain time, so
+    # capacity and per-request service are exact properties of the graph +
+    # scheduler, independent of the runner
+    fifo = idx.scheduler(spec=spec)
+    fifo.warmup(Qn[0])
+    drain = max(
+        r.t_done for r in fifo.run_stream(Qn, None, warm=False,
+                                          tick_cost=TICK_COST)
+    )
+    capacity = n_req / drain
+    service = OVERLOAD_SLOTS * drain / n_req
+    slo_ms = round(1e3 * SLO_MULT * service, 3)
+    slo_s = slo_ms * 1e-3
+    print(f"[overload] capacity={capacity:.0f} q/s "
+          f"service={1e3 * service:.2f} ms slo={slo_ms:.2f} ms "
+          f"slots={OVERLOAD_SLOTS}")
+
+    ladder = demotion_ladder(spec)  # ef 96 -> 48 -> 24 (synthesized)
+    qos = idx.scheduler(spec=spec, ladder=ladder, slo_ms=slo_ms,
+                        service_prior=service,
+                        admission_margin=ADMISSION_MARGIN)
+    qos.warmup(Qn[0])
+
+    mix = np.asarray(PRIORITY_MIX, float)
+    mix = mix / mix.sum()
+    sweep = []
+    for util in utils:
+        rate = util * capacity
+        arr, tids = multi_tenant_arrivals(
+            n_req, rate, OVERLOAD_TENANTS, np.random.default_rng(11))
+        prios = np.random.default_rng(13).choice(
+            len(mix), size=n_req, p=mix)
+        # interleaved best-of-REPEATS (fifo, admission) pairs.  On the
+        # deterministic clock the FIFO repeats are identical; the admission
+        # repeats differ only through the service-rate estimator's learned
+        # per-rung means carrying across runs — keeping the best-calibrated
+        # repeat and recording the spread makes that convergence visible in
+        # the CI step summary instead of flaky
+        best, vals = None, []
+        for _ in range(REPEATS):
+            f_res = fifo.run_stream(Qn, arr, warm=False, tick_cost=TICK_COST)
+            q_res = qos.run_stream(Qn, arr, warm=False, tenants=tids,
+                                   priorities=prios, tick_cost=TICK_COST)
+            f_sum = qos_summary(f_res, slo_s)
+            q_sum = qos_summary(q_res, slo_s, n_classes=len(mix),
+                                n_tenants=OVERLOAD_TENANTS)
+            counters = dict(qos.qos_stats)  # zeroed by the next reset
+            vals.append(q_sum["in_slo"])
+            rank = (q_sum["in_slo"], q_sum["goodput_qps"])
+            if best is None or rank > best[0]:
+                best = (rank, f_sum, q_sum, counters)
+        _, f_sum, q_sum, counters = best
+        by_class = q_sum.get("in_slo_by_class", {})
+        row = {
+            "utilization": util,
+            "offered_qps": round(rate, 1),
+            "in_slo_admission": q_sum["in_slo"],
+            "in_slo_fifo": f_sum["in_slo"],
+            "in_slo_ratio": round(q_sum["in_slo"] /
+                                  max(f_sum["in_slo"], 1e-4), 2),
+            "goodput_qps": q_sum["goodput_qps"],
+            "goodput_fifo_qps": f_sum["goodput_qps"],
+            "in_slo_class0": by_class.get(0, q_sum["in_slo"]),
+            "in_slo_class1": by_class.get(1, q_sum["in_slo"]),
+            "shed_frac": q_sum["shed_frac"],
+            "demoted": counters["demoted"],
+            "in_slo_spread": round(max(vals) - min(vals), 4),
+        }
+        sweep.append(row)
+        print(f"[overload] util={util:4.2f}: in-SLO {row['in_slo_admission']:.3f} "
+              f"(fifo {row['in_slo_fifo']:.3f}, {row['in_slo_ratio']:.1f}x) "
+              f"goodput {row['goodput_qps']:7.1f} q/s "
+              f"(fifo {row['goodput_fifo_qps']:7.1f}) "
+              f"class0/1 {row['in_slo_class0']:.3f}/{row['in_slo_class1']:.3f} "
+              f"demoted {row['demoted']} shed {row['shed_frac']:.2f}")
+
+    peak = max(r["goodput_qps"] for r in sweep)
+    for r in sweep:
+        r["goodput_frac_of_peak"] = round(r["goodput_qps"] / peak, 4)
+
+    # graceful-degradation acceptance: past saturation the admission path
+    # must keep at least twice the FIFO in-SLO fraction at near-peak goodput
+    for r in (r for r in sweep if r["utilization"] >= 1.0):
+        assert r["in_slo_admission"] >= 2.0 * r["in_slo_fifo"], (
+            f"util {r['utilization']}: admission in-SLO "
+            f"{r['in_slo_admission']} < 2x fifo {r['in_slo_fifo']}")
+        assert r["goodput_frac_of_peak"] >= 0.9, (
+            f"util {r['utilization']}: goodput fell to "
+            f"{r['goodput_frac_of_peak']:.2f} of peak")
+
+    result = {
+        "workload": {"distance": "kl", "n_db": n, "n_requests": n_req,
+                     "dim": dim, "k": K, "NN": NN, "ef_construction": EF_C,
+                     "ef_search": EF_S, "slots": OVERLOAD_SLOTS,
+                     "steps_per_sync": STEPS_PER_SYNC,
+                     "backend": jax.default_backend()},
+        "spec": spec.to_dict(),
+        "spec_fingerprint": spec.fingerprint(),
+        "overload": sweep,
+        "overload_meta": {
+            "clock": "deterministic-tick",
+            "tick_cost_s": TICK_COST,
+            "capacity_qps": round(capacity, 1),
+            "service_ms": round(1e3 * service, 3),
+            "slo_ms": slo_ms,
+            "slo_mult": SLO_MULT,
+            "admission_margin": ADMISSION_MARGIN,
+            "tenants": OVERLOAD_TENANTS,
+            "priority_mix": list(mix),
+            "ladder": [s.ef_search for s in ladder],
+            "repeats": REPEATS,
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
 if __name__ == "__main__":
     run_serve()
+    run_overload()

@@ -28,8 +28,13 @@ import argparse
 import json
 import sys
 
-# schema: section -> (identity keys, throughput metric) per bench file kind;
-# single-entry sections use () as identity.  recall@10 is gated everywhere.
+# schema: section -> (identity keys, throughput metric[, abs-gated metrics])
+# per bench file kind; single-entry sections use () as identity.  recall@10
+# is gated everywhere.  The optional third element maps extra metrics to
+# EXPLICIT absolute tolerances (fresh >= baseline - tol), for bounded
+# fractions like an in-SLO rate where a relative gate would be meaningless
+# near zero.  An optional top-level "spread" (section, key) names a
+# measured-noise field echoed into the CI step summary next to the table.
 SCHEMAS = {
     "beam_engine": {
         "calibration": ("reference_frontier", "qps"),
@@ -82,6 +87,21 @@ SCHEMAS = {
         "calibration": None,
         "sections": {
             "blend_sweep": (("alpha", "ef"), "eval_reduction"),
+        },
+    },
+    # SLO-aware admission overload sweep (bench_serve.run_overload): per
+    # utilization point, the admission run's in-SLO fraction is gated at an
+    # absolute tolerance (it is a bounded rate — 1.0 under light load, so a
+    # relative gate would never trip there and over-trip near zero) and
+    # goodput as a fraction of the sweep's peak is gated relatively; both
+    # are machine-independent, so no calibration.  in_slo_spread is the
+    # measured best-of-N spread, echoed into the step summary.
+    "overload": {
+        "calibration": None,
+        "spread": ("overload", "in_slo_spread"),
+        "sections": {
+            "overload": (("utilization",), "goodput_frac_of_peak",
+                         {"in_slo_admission": 0.1}),
         },
     },
     # spec auto-tuner (bench_autotune): the tuned spec must keep matching or
@@ -146,7 +166,9 @@ def compare(base: dict, fresh: dict, *, qps_tol: float, recall_tol: float,
                    if calibrate and schema["calibration"] else None)
 
     rows, failures = [], []
-    for section, (id_keys, thr) in schema["sections"].items():
+    for section, sect_spec in schema["sections"].items():
+        id_keys, thr = sect_spec[0], sect_spec[1]
+        abs_gates = sect_spec[2] if len(sect_spec) > 2 else {}
         b, f = _entries(base, section, id_keys), _entries(fresh, section, id_keys)
         for ident in sorted(set(b) & set(f), key=str):
             cfg = ", ".join(f"{k}={v}" for k, v in zip(id_keys, ident)) or "-"
@@ -155,6 +177,11 @@ def compare(base: dict, fresh: dict, *, qps_tol: float, recall_tol: float,
             if thr is not None and thr in be and thr in fe and section != cal_section:
                 floor = be[thr] * cal * (1.0 - qps_tol)
                 checks.append((thr, be[thr] * cal, fe[thr], floor, fe[thr] >= floor))
+            for metric, tol in abs_gates.items():
+                if metric in be and metric in fe:
+                    floor = be[metric] - tol
+                    checks.append((metric, be[metric], fe[metric], floor,
+                                   fe[metric] >= floor))
             if RECALL in be and RECALL in fe:
                 floor = be[RECALL] - recall_tol
                 checks.append((RECALL, be[RECALL], fe[RECALL], floor, fe[RECALL] >= floor))
@@ -213,6 +240,19 @@ def main(argv=None):
             calibrate=args.calibrate,
         )
         md = to_markdown(f"{base_path} vs {fresh_path}", rows, cal)
+        spread = SCHEMAS[detect_schema(fresh)].get("spread")
+        if spread:
+            sec, field = spread
+            id_keys = SCHEMAS[detect_schema(fresh)]["sections"][sec][0]
+            parts = [
+                "{}: {}".format(
+                    ", ".join(f"{k}={r.get(k)}" for k in id_keys) or "-",
+                    r[field])
+                for r in _entries(fresh, sec, id_keys).values()
+                if field in r
+            ]
+            if parts:
+                md += f"\nmeasured {field}: {'; '.join(parts)}\n"
         print(md)
         if args.summary:
             with open(args.summary, "a") as fh:

@@ -18,7 +18,8 @@ def main():
                     help="reduced combos/sizes (CI mode)")
     ap.add_argument("--only", default=None,
                     choices=[None, "table3", "fig12", "kernels", "engine",
-                             "build", "online", "serve", "spec", "autotune"])
+                             "build", "online", "serve", "overload", "spec",
+                             "autotune"])
     ap.add_argument("--n-db", type=int, default=None)
     ap.add_argument("--n-q", type=int, default=None)
     args = ap.parse_args()
@@ -56,6 +57,12 @@ def main():
         from . import bench_serve
 
         bench_serve.run_serve(quick=args.quick)
+
+    if args.only in (None, "overload"):
+        print("\n=== overload: SLO-aware admission control vs FIFO ===")
+        from . import bench_serve
+
+        bench_serve.run_overload(quick=args.quick)
 
     if args.only in (None, "spec"):
         print("\n=== spec: Blend(alpha) construction-distance sweep ===")

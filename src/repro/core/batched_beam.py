@@ -176,6 +176,7 @@ def beam_step(
     C: int,
     max_steps: int,
     t_active=None,  # optional (B,) i32: per-query frontier width this step
+    ef_active=None,  # optional (B,) i32: per-query effective beam width
 ) -> BatchBeamState:
     """One lock-step of the batched beam engine (the while_loop body).
 
@@ -187,6 +188,14 @@ def beam_step(
     that exist], used by the adaptive-frontier policy).  Queries with
     ``done=True`` are frozen: their beam, visited set and counters pass
     through unchanged.
+
+    ``ef_active`` (per-query, <= ef) runs a query at a NARROWER efSearch
+    inside the fixed (B, ef) arrays: the termination/pruning radius is read
+    at position ``ef_active - 1`` and beam entries at positions
+    >= ``ef_active`` are voided after the merge, which makes the state
+    machine entry-for-entry identical to an engine compiled at
+    ``ef = ef_active`` (the scheduler's QoS demotion ladder relies on this
+    parity; see tests/test_admission.py).
     """
     B = st.beam_d.shape[0]
     rows_b = jnp.arange(B)[:, None]
@@ -195,7 +204,11 @@ def beam_step(
     # -- per-query convergence masking (NMSLIB efSearch semantics)
     cand = jnp.where(st.expanded, INF, st.beam_d)  # (B, ef)
     best = jnp.min(cand, axis=1)
-    worst = st.beam_d[:, -1]
+    if ef_active is None:
+        worst = st.beam_d[:, -1]
+    else:
+        wi = jnp.clip(ef_active - 1, 0, ef - 1)[:, None]
+        worst = jnp.take_along_axis(st.beam_d, wi, axis=1)[:, 0]
     done = st.done | ~((best <= worst) & jnp.isfinite(best)) | (st.hops >= max_steps)
     active = ~done
 
@@ -258,6 +271,15 @@ def beam_step(
     beam_d, beam_i, beam_e = _bitonic_merge(
         (st.beam_d, st.beam_i, expanded), (kept_d, kept_i, ~kept_ok), ef
     )
+    if ef_active is not None:
+        # void the beam tail beyond each query's effective width: the first
+        # ef_active entries of the stable merge are exactly what a merge
+        # into an ef_active-wide beam would keep, so voiding the rest keeps
+        # the narrow-engine equivalence exact
+        off = jnp.arange(ef, dtype=jnp.int32)[None, :] >= ef_active[:, None]
+        beam_d = jnp.where(off, INF, beam_d)
+        beam_i = jnp.where(off, -1, beam_i)
+        beam_e = beam_e | off
     return BatchBeamState(
         beam_d,
         beam_i,
@@ -278,7 +300,7 @@ def frontier_compact_width(T: int, M: int, compact: int) -> int:
 
 
 def adaptive_width_update(core: BatchBeamState, t_cur, stall, worst, T: int,
-                          patience: int):
+                          patience: int, radius=None):
     """One step of the per-query adaptive-frontier policy (PR 4).
 
     The beam radius (worst member) is the pruning threshold: while it is
@@ -290,8 +312,13 @@ def adaptive_width_update(core: BatchBeamState, t_cur, stall, worst, T: int,
     steps.  Shared verbatim by the slot scheduler's host tick loop and
     the offline ``batched_beam_search`` while_loop, so a closed-batch
     adaptive run is bit-identical to the all-at-once scheduler run.
+
+    ``radius`` overrides the watermark source for callers whose effective
+    beam width is narrower than the array width (the scheduler's per-slot
+    ``ef_active`` demotion path reads the radius at ``ef_active - 1``).
     """
-    radius = core.beam_d[:, -1]
+    if radius is None:
+        radius = core.beam_d[:, -1]
     improved = (radius < worst) | ~jnp.isfinite(radius)
     stall = jnp.where(improved, 0, stall + 1)
     t_cur = jnp.where(

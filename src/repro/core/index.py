@@ -400,7 +400,11 @@ class ANNIndex:
                   adaptive: Optional[bool] = None, patience: Optional[int] = None,
                   steps_per_sync: Optional[int] = None,
                   compact: Optional[int] = None, k_c: Optional[int] = None,
-                  use_pallas=None, spec: Optional[RetrievalSpec] = None):
+                  use_pallas=None, spec: Optional[RetrievalSpec] = None,
+                  ladder: Optional[list] = None, slo_ms: Optional[float] = None,
+                  shed: bool = True, tenant_weights: Optional[dict] = None,
+                  background=False, service_prior: Optional[float] = None,
+                  admission_margin: float = 1.0):
         """Continuous-batching slot scheduler over this index.
 
         Returns a ``repro.core.scheduler.SlotScheduler``: ``slots``
@@ -421,8 +425,19 @@ class ANNIndex:
         the beams run under the bound search policy and each retired
         request's ``k_c`` candidates are re-ranked under the original
         distance — results identical to ``searcher()`` on the same spec.
+
+        QoS serving: ``ladder`` (a ``spec.demotion_ladder`` list — rung 0
+        must be the serving operating point) maps each ladder spec onto a
+        scheduler ``Rung`` so SLO admission control (``slo_ms``, ``shed``)
+        can demote requests to cheaper effective-ef points; rung cost
+        scales default to the ef ratio and ``admission_margin`` adds
+        planning slack over the learned mean service times.
+        ``tenant_weights`` configures DRR
+        fairness; ``background=True`` hangs one
+        ``OnlineIndex.compact_slice`` per idle tick (mutable index only; a
+        callable is used as the hook verbatim).
         """
-        from .scheduler import GraphView, SlotScheduler
+        from .scheduler import GraphView, Rung, SlotScheduler
 
         self._check_search_policy(spec)
         spec = spec if spec is not None else self.spec
@@ -484,9 +499,44 @@ class ANNIndex:
                     )
                 return view
 
+        rungs = None
+        if ladder is not None:
+            rungs = []
+            for s in ladder:
+                self._check_search_policy(s)
+                if s.k != k:
+                    raise ValueError(
+                        f"ladder spec k {s.k} != serving k {k}; every rung "
+                        f"must honor the same result contract")
+                if s.k_c != spec.k_c:
+                    raise ValueError(
+                        f"ladder spec k_c {s.k_c} != serving k_c "
+                        f"{spec.k_c}; rerank width cannot vary per rung")
+                r_ef = min(max(s.ef_search, k_c or k), ef)
+                name = f"ef{s.ef_search}" + ("+adaptive" if s.adaptive else "")
+                rungs.append(Rung(ef=r_ef, adaptive=bool(s.adaptive),
+                                  name=name, scale=r_ef / ef))
+
+        background_fn = None
+        if callable(background):
+            background_fn = background
+        elif background:
+            if self.online is None:
+                raise ValueError(
+                    "background=True hangs OnlineIndex.compact_slice on "
+                    "idle ticks and requires a mutable index — call "
+                    "ensure_online() first (or pass a callable hook)")
+            online_bg = self.online
+
+            def background_fn():
+                return online_bg.compact_slice()
+
         return SlotScheduler(
             beam_dist, graph_fn, dim=dim, slots=slots, ef=ef, k=k,
             frontier=frontier, adaptive=adaptive, patience=patience,
             steps_per_sync=steps_per_sync, compact=compact,
             use_pallas=use_pallas, k_c=k_c, rerank_fn=rerank_fn,
+            ladder=rungs, slo_ms=slo_ms, shed=shed,
+            tenant_weights=tenant_weights, background_fn=background_fn,
+            service_prior=service_prior, admission_margin=admission_margin,
         )

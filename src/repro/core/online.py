@@ -41,6 +41,7 @@ steady-state insert/delete/query churn triggers no recompilation.
 
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -263,6 +264,11 @@ class OnlineIndex:
         # surfaces in that request's response.
         self.mutation_epoch: int = 0
         self.killed_epoch = np.zeros((cap,), np.int64)
+        # incremental compaction state (see compact_slice): nodes still
+        # awaiting a repair wave, and whether un-dropped tombstone edges
+        # exist since the last drop pass
+        self._repair_pending: collections.deque = collections.deque()
+        self._compact_dirty = False
 
     # ------------------------------------------------------------- construct
 
@@ -412,6 +418,7 @@ class OnlineIndex:
             self._free.extend(int(i) for i in ids[newly])
             self.mutation_epoch += 1
             self.killed_epoch[ids[newly]] = self.mutation_epoch
+            self._compact_dirty = True
             self._refresh_entries()
         return was_alive
 
@@ -422,13 +429,24 @@ class OnlineIndex:
         surviving node that was adjacent to a tombstone via a repair beam
         search + reverse-edge merge.  Compaction never resurrects a
         tombstone — dead slots stay on the free list until an insert
-        recycles them.
+        recycles them.  Any repair debt left by partially drained
+        ``compact_slice`` calls is folded in and cleared.
         """
         adj, adj_d, affected, n_dropped = _drop_dead_edges(
             self.adj, self.adj_d, self.alive, jnp.int32(self.n_total)
         )
         self.adj, self.adj_d = adj, adj_d
-        affected_ids = np.flatnonzero(np.asarray(affected))
+        affected_np = np.asarray(affected).copy()
+        if self._repair_pending:
+            # nodes whose dead edges a prior slice already dropped won't be
+            # re-flagged by this drop pass — pull them from the slice queue
+            alive_np = np.asarray(self.alive)
+            for u in self._repair_pending:
+                if alive_np[u]:
+                    affected_np[u] = True
+            self._repair_pending.clear()
+        self._compact_dirty = False
+        affected_ids = np.flatnonzero(affected_np)
         stats = {
             "tombstones": self.n_total - self.n_alive,
             "dead_edges_dropped": int(n_dropped),
@@ -449,6 +467,62 @@ class OnlineIndex:
                 NN=self.NN, ef=self.ef_construction, T=T, R=self.rev_rounds,
             )
         return stats
+
+    @property
+    def compaction_debt(self) -> int:
+        """Outstanding incremental-compaction work: queued repair nodes,
+        plus one while tombstone edges still await a drop pass."""
+        return len(self._repair_pending) + (1 if self._compact_dirty else 0)
+
+    def compact_slice(self, max_nodes=None) -> dict:
+        """One bounded increment of ``compact()`` — the slot scheduler's
+        idle-tick background hook.
+
+        The first slice after new tombstones appear runs the same jitted
+        dead-edge drop pass as ``compact()`` and queues the affected nodes;
+        each subsequent slice repairs up to ``max_nodes`` (default
+        ``self.wave``) queued nodes through the identical ``_repair_wave``
+        chunks, so draining the slice queue with ``max_nodes=self.wave``
+        (and no interleaved mutations) leaves the adjacency bit-identical
+        to one offline ``compact()``.  Wave shapes are fixed per
+        ``max_nodes``, so steady background compaction never recompiles.
+        Returns ``{"repaired", "remaining", "dead_edges_dropped"}``.
+        """
+        W = max(1, int(min(self.wave,
+                           self.wave if max_nodes is None else max_nodes)))
+        dropped = 0
+        if not self._repair_pending and self._compact_dirty:
+            adj, adj_d, affected, n_dropped = _drop_dead_edges(
+                self.adj, self.adj_d, self.alive, jnp.int32(self.n_total)
+            )
+            self.adj, self.adj_d = adj, adj_d
+            self._repair_pending.extend(
+                int(u) for u in np.flatnonzero(np.asarray(affected)))
+            self._compact_dirty = False
+            dropped = int(n_dropped)
+        if not self._repair_pending:
+            return {"repaired": 0, "remaining": 0,
+                    "dead_edges_dropped": dropped}
+        alive_np = np.asarray(self.alive)
+        chunk: list[int] = []
+        while self._repair_pending and len(chunk) < W:
+            u = self._repair_pending.popleft()
+            # a queued node tombstoned since the drop pass needs no repair
+            if alive_np[u]:
+                chunk.append(u)
+        if chunk:
+            T = max(1, min(self.frontier, self.ef_construction))
+            pids = np.full((W,), self.capacity, np.int32)
+            pids[: len(chunk)] = chunk
+            self.adj, self.adj_d = _repair_wave(
+                self.build_dist, self.adj, self.adj_d, self.consts, self.qc_all,
+                self.alive, self.entries, jnp.asarray(pids),
+                jnp.asarray(pids < self.capacity),
+                NN=self.NN, ef=self.ef_construction, T=T, R=self.rev_rounds,
+            )
+        return {"repaired": len(chunk),
+                "remaining": len(self._repair_pending),
+                "dead_edges_dropped": dropped}
 
     # -------------------------------------------------------------- serving
 

@@ -496,3 +496,77 @@ def load_spec(src) -> "RetrievalSpec":
     if src.get("kind") == TUNED_ARTIFACT_KIND:
         return load_tuned_artifact(src)[0]
     return RetrievalSpec.from_dict(src)
+
+
+# ---------------------------------------------------------------------------
+# QoS demotion ladders (per-request class -> operating-point mapping)
+# ---------------------------------------------------------------------------
+
+# the knobs a demotion rung may vary: everything else — distance scenario,
+# construction, k/k_c, scheduler shape — is pinned to the serving spec
+_LADDER_SEARCH_FIELDS = ("ef_search", "frontier", "adaptive", "patience")
+
+
+def _ladder_key(spec: "RetrievalSpec") -> str:
+    d = spec.to_dict()
+    for f in _LADDER_SEARCH_FIELDS:
+        d.pop(f)
+    return json.dumps(d, sort_keys=True)
+
+
+def demotion_ladder(spec: "RetrievalSpec", source=None, *, max_rungs: int = 3,
+                    floor_ef: Optional[int] = None) -> list["RetrievalSpec"]:
+    """Ordered QoS operating points for SLO-aware admission, full first.
+
+    Rung 0 is ``spec`` itself (the full-fidelity serving point); later
+    rungs are strictly cheaper search-side operating points the scheduler's
+    admission controller may demote a request to when its SLO budget no
+    longer fits the full-fidelity service time.
+
+    ``source`` (optional) is a tuned-spec artifact — path, JSON string, or
+    parsed dict (``tuned_artifact`` layout): its Pareto frontier supplies
+    the cheaper points, filtered to entries whose build side (and k/k_c)
+    match ``spec`` exactly and whose ``ef_search`` lies in
+    ``[floor_ef, spec.ef_search)``, ordered most-expensive first.  Without
+    a source (or when no frontier entry qualifies) the ladder is
+    synthesized by halving ``ef_search`` down to ``floor_ef``.
+
+    ``floor_ef`` defaults to ``max(k, k_c, 16)`` — a rung can never return
+    fewer than the contracted result (or rerank-candidate) count.
+    """
+    floor = max(spec.k, spec.k_c or spec.k,
+                16 if floor_ef is None else int(floor_ef))
+    rungs = [spec]
+    if source is not None:
+        if not (isinstance(source, dict) and "frontier" in source):
+            _, source = load_tuned_artifact(source)
+        key = _ladder_key(spec)
+        cands: dict = {}
+        for entry in source.get("frontier", ()):
+            try:
+                s = RetrievalSpec.from_dict(entry["spec"])
+            except (KeyError, TypeError, ValueError):
+                continue
+            if _ladder_key(s) != key or not floor <= s.ef_search < spec.ef_search:
+                continue
+            cands.setdefault((s.ef_search, s.adaptive), s)
+        for ef_a in sorted(cands, key=lambda t: (-t[0], t[1])):
+            if len(rungs) >= max_rungs:
+                break
+            rungs.append(cands[ef_a])
+    if len(rungs) == 1:
+        e = spec.ef_search // 2
+        while len(rungs) < max_rungs and e >= floor:
+            rungs.append(spec.replace(ef_search=e))
+            e //= 2
+    return rungs
+
+
+def class_spec(ladder: list["RetrievalSpec"], priority: int) -> "RetrievalSpec":
+    """Per-request QoS class -> operating-point spec.
+
+    Priority class ``p`` (0 = highest) starts at demotion-ladder rung
+    ``min(p, len(ladder) - 1)`` — lower classes begin life already demoted,
+    and admission control can only move them further down the ladder.
+    """
+    return ladder[min(max(int(priority), 0), len(ladder) - 1)]

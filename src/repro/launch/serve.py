@@ -24,6 +24,19 @@ dispatch-on-idle dynamic batching, continuous) over the identical arrival
 trace, plus the per-query adaptive-frontier evaluation counts when
 ``--adaptive-frontier`` is set.
 
+SLO-aware admission & multi-tenant QoS (``--slo-ms``, with ``--continuous``):
+each request carries a latency budget; the scheduler's admission controller
+predicts queue wait from a running service-rate estimate and *demotes*
+requests that would miss their SLO to cheaper operating points (lower-``ef``
+rungs from ``repro.core.spec.demotion_ladder`` — drawn from a tuned-spec
+artifact's Pareto frontier when ``--spec`` names one) before resorting to
+load shedding.  ``--tenants N`` splits the offered load into N independent
+per-tenant Poisson traces served under deficit-round-robin fairness;
+``--priority`` gives the class mix (e.g. ``0.6,0.4``) — class ``p`` starts
+life at ladder rung ``p``.  The driver reports in-SLO fraction and goodput
+for the admission-controlled run against a FIFO baseline over the identical
+trace, per class and per tenant.
+
 Declarative scenarios (``--spec spec.json``): a serialized ``RetrievalSpec``
 fully defines the retrieval scenario — base distance, graph-construction
 policy (incl. the ``blend``/``max``/``rankblend`` combinators), search
@@ -36,6 +49,7 @@ searcher and the slot scheduler (retire-time rerank).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -55,6 +69,72 @@ def poisson_arrivals(n: int, rate: float, rng=None) -> np.ndarray:
     """Cumulative arrival times (seconds) of a rate-``rate`` Poisson process."""
     rng = rng or np.random.default_rng(0)
     return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def multi_tenant_arrivals(n: int, rate: float, tenants: int, rng=None,
+                          weights=None):
+    """Merge independent per-tenant Poisson traces into one arrival stream.
+
+    Each tenant runs its own Poisson process; tenant ``t`` gets
+    ``weights[t] / sum(weights)`` of the total ``rate`` (uniform by
+    default) and ``round(n * share)`` of the requests.  Returns
+    ``(arrivals (n,), tenant_ids (n,))`` sorted by arrival time — the
+    superposition the scheduler's deficit-round-robin queues see.
+    """
+    rng = rng or np.random.default_rng(0)
+    tenants = max(1, int(tenants))
+    w = np.ones((tenants,), float) if weights is None else np.asarray(
+        weights, float)
+    w = w / w.sum()
+    counts = np.maximum(1, np.round(n * w).astype(int))
+    while counts.sum() > n:
+        counts[int(np.argmax(counts))] -= 1
+    while counts.sum() < n:
+        counts[int(np.argmin(counts))] += 1
+    arr = np.concatenate([
+        poisson_arrivals(int(c), rate * w[t], rng)
+        for t, c in enumerate(counts)
+    ])
+    tid = np.concatenate([
+        np.full((int(c),), t, np.int64) for t, c in enumerate(counts)
+    ])
+    order = np.argsort(arr, kind="stable")
+    return arr[order], tid[order]
+
+
+def qos_summary(results, slo_s: float, *, n_classes: int = 1,
+                n_tenants: int = 1) -> dict:
+    """In-SLO / goodput accounting over a list of ``SlotResult``.
+
+    A request is in-SLO when it was served (not shed) within ``slo_s`` of
+    its arrival; shed requests count as misses.  Goodput is in-SLO
+    completions per second of trace makespan.  Adds per-class / per-tenant
+    in-SLO breakdowns when more than one exists.
+    """
+    lat = np.asarray([r.latency for r in results], float)
+    shed = np.asarray([r.shed for r in results], bool)
+    ok = ~shed & (lat <= slo_s)
+    t_end = max(r.t_done for r in results)
+    t_start = min(r.t_arrival for r in results)
+    out = {
+        "n": len(results),
+        "in_slo": round(float(ok.mean()), 4),
+        "goodput_qps": round(float(ok.sum()) / max(t_end - t_start, 1e-9), 1),
+        "shed_frac": round(float(shed.mean()), 4),
+    }
+    if n_classes > 1:
+        prio = np.asarray([r.priority for r in results])
+        out["in_slo_by_class"] = {
+            int(c): round(float(ok[prio == c].mean()), 4)
+            for c in range(n_classes) if (prio == c).any()
+        }
+    if n_tenants > 1:
+        ten = np.asarray([r.tenant for r in results])
+        out["in_slo_by_tenant"] = {
+            int(t): round(float(ok[ten == t].mean()), 4)
+            for t in range(n_tenants) if (ten == t).any()
+        }
+    return out
 
 
 def latency_stats(lat_s, prefix: str = "") -> dict:
@@ -263,7 +343,9 @@ def build_and_serve(*, spec: RetrievalSpec | None = None,
                     churn_insert: int = 256, churn_delete: int = 200,
                     continuous: bool = False, slots: int = 48,
                     cont_frontier: int = 12, adaptive_frontier: bool = False,
-                    utilization: float = 0.4, verbose: bool = True):
+                    utilization: float = 0.4, slo_ms: float | None = None,
+                    tenants: int = 1, priority_mix=None, ladder_source=None,
+                    verbose: bool = True):
     if spec is None:
         spec = RetrievalSpec(
             distance=distance, build_policy=index_sym, builder=builder,
@@ -390,6 +472,39 @@ def build_and_serve(*, spec: RetrievalSpec | None = None,
         if verbose:
             print(f"[serve/continuous] {cont}")
 
+        if slo_ms is not None:
+            from repro.core.spec import demotion_ladder
+
+            ladder = demotion_ladder(spec, ladder_source)
+            mix = np.asarray([1.0] if not priority_mix else priority_mix,
+                             float)
+            mix = mix / mix.sum()
+            rng_q = np.random.default_rng(7)
+            q_arr, t_ids = multi_tenant_arrivals(
+                n_queries, rate, tenants, rng_q)
+            prios = rng_q.choice(len(mix), size=n_queries, p=mix)
+            sched = idx.scheduler(
+                spec=spec, ladder=ladder, slo_ms=slo_ms,
+                background=idx.online is not None)
+            res = sched.run_stream(Q, q_arr, tenants=t_ids, priorities=prios)
+            # FIFO baseline: same trace, no admission control / demotion
+            res_f = idx.scheduler(spec=spec).run_stream(Q, q_arr)
+            fifo = qos_summary(res_f, slo_ms * 1e-3)
+            qos = {
+                "slo_ms": slo_ms,
+                "tenants": max(1, int(tenants)),
+                "ladder": [r.name for r in sched.rungs],
+                **qos_summary(res, slo_ms * 1e-3, n_classes=len(mix),
+                              n_tenants=tenants),
+                "demoted": sched.qos_stats["demoted"],
+                "shed": sched.qos_stats["shed"],
+                "fifo_in_slo": fifo["in_slo"],
+                "fifo_goodput_qps": fifo["goodput_qps"],
+            }
+            stats["qos"] = qos
+            if verbose:
+                print(f"[serve/qos] {qos}")
+
     if churn_rounds > 0:
         stats["churn"] = run_churn(
             idx, Q, pool, rounds=churn_rounds, insert_n=churn_insert,
@@ -455,7 +570,33 @@ def main(argv=None):
     ap.add_argument("--utilization", type=float, default=0.4,
                     help="Poisson arrival rate as a fraction of the measured "
                          "static-batch capacity")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request latency budget (ms): serve the "
+                         "continuous trace through SLO-aware admission "
+                         "control (demote-then-shed) and report in-SLO "
+                         "fraction / goodput vs a FIFO baseline")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="independent per-tenant Poisson traces merged into "
+                         "the offered load, served under deficit-round-"
+                         "robin fairness (QoS path, needs --slo-ms)")
+    ap.add_argument("--priority", default=None,
+                    help="comma-separated QoS class mix, highest class "
+                         "first (e.g. 0.6,0.4): class p starts at demotion-"
+                         "ladder rung p (QoS path, needs --slo-ms)")
     args = ap.parse_args(argv)
+    if args.slo_ms is not None and not args.continuous:
+        ap.error("--slo-ms needs --continuous (it shapes the arrival trace)")
+    if (args.tenants != 1 or args.priority) and args.slo_ms is None:
+        ap.error("--tenants / --priority need --slo-ms (the QoS path)")
+    priority_mix = None
+    if args.priority:
+        try:
+            priority_mix = [float(x) for x in args.priority.split(",")]
+        except ValueError:
+            ap.error(f"--priority expects comma-separated fractions, "
+                     f"got {args.priority!r}")
+        if not priority_mix or min(priority_mix) <= 0:
+            ap.error("--priority fractions must be positive")
     scenario = {
         "distance": args.distance, "ef_search": args.ef_search,
         "index_sym": args.index_sym, "builder": args.builder,
@@ -466,6 +607,7 @@ def main(argv=None):
         "adaptive_frontier": args.adaptive_frontier,
     }
     spec = None
+    ladder_source = None
     if args.spec:
         clash = sorted(k for k, v in scenario.items() if v is not None)
         if clash:
@@ -475,12 +617,19 @@ def main(argv=None):
         # accepts both a plain RetrievalSpec JSON and a tuned-spec artifact
         # (kind "repro.autotune/tuned-spec@1", fingerprint-verified)
         spec = load_spec(args.spec)
+        with open(args.spec) as fh:
+            doc = json.load(fh)
+        if isinstance(doc, dict) and "frontier" in doc:
+            # a tuned artifact's Pareto frontier feeds the demotion ladder
+            ladder_source = doc
     return build_and_serve(
         spec=spec,
         n_db=args.n_db, dim=args.dim, n_queries=args.queries,
         batch=args.batch, churn_rounds=args.churn_rounds,
         churn_insert=args.churn_insert, churn_delete=args.churn_delete,
         continuous=args.continuous, utilization=args.utilization,
+        slo_ms=args.slo_ms, tenants=args.tenants,
+        priority_mix=priority_mix, ladder_source=ladder_source,
         **{k: v for k, v in scenario.items() if v is not None})
 
 

@@ -1,0 +1,430 @@
+"""SLO-aware admission control, multi-tenant QoS and background compaction.
+
+Acceptance contract (ISSUE 8): the admission controller predicts queue wait
+and per-rung service from a running service-rate estimate, demotes a
+request down the ladder BEFORE shedding it, and sheds only when even the
+cheapest rung's predicted completion is past budget.  Deficit round-robin
+keeps a minority tenant from starving under a 10:1 skewed trace.  A
+demoted request's results are bit-identical to a fresh submit against a
+scheduler compiled at the demoted ef.  Idle-tick ``compact_slice`` hooks
+interleave with in-flight queries without corrupting any slot.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ANNIndex, RetrievalSpec, get_distance
+from repro.core.scheduler import (
+    AdmissionController,
+    Rung,
+    ServiceRateEstimator,
+    SlotScheduler,
+)
+from repro.core.spec import class_spec, demotion_ladder
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+N_DB, N_Q, DIM, K, EF = 420, 24, 16, 10, 48
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = RetrievalSpec(distance="kl", builder="swgraph", NN=10,
+                         ef_construction=48, wave=16, k=K, ef_search=EF,
+                         slots=8, sched_frontier=4)
+    X = lda_like_histograms(jax.random.PRNGKey(0), N_DB + N_Q, DIM)
+    Q, db = split_queries(X, N_Q, jax.random.PRNGKey(1))
+    idx = ANNIndex.build(db, spec=spec, key=jax.random.PRNGKey(2))
+    return idx, spec, np.asarray(Q)
+
+
+# ---------------------------------------------------------- estimator math
+
+
+def test_estimator_predicted_wait():
+    est = ServiceRateEstimator(slots=4, alpha=1.0)
+    assert est.predicted_wait(0, 0) == 0.0  # cold: optimistic
+    est.observe(0.1)
+    assert est.mean == pytest.approx(0.1)
+    assert est.rate_per_slot == pytest.approx(10.0)
+    # requests that fit the free slots wait nothing
+    assert est.predicted_wait(0, 1) == 0.0
+    assert est.predicted_wait(2, 3) == 0.0
+    # position p with f free slots waits (p - f + 1) retires, and a full
+    # scheduler retires slots/mean per second
+    assert est.predicted_wait(3, 1) == pytest.approx(3 * 0.1 / 4)
+    assert est.predicted_wait(5, 0) == pytest.approx(6 * 0.1 / 4)
+
+
+def test_estimator_ewma_and_per_rung_means():
+    est = ServiceRateEstimator(slots=2, alpha=0.5, n_rungs=2)
+    est.observe(1.0, level=0)
+    est.observe(3.0, level=0)
+    assert est.mean == pytest.approx(2.0)  # 0.5*1 + 0.5*3
+    # rung 1 unobserved: falls back to rung 0 x scale
+    assert est.service_s(1, scale=0.5) == pytest.approx(1.0)
+    # after its first retire the rung's OWN mean wins over the scale model
+    est.observe(1.6, level=1)
+    assert est.service_s(1, scale=0.5) == pytest.approx(1.6)
+    assert est.service_s(0) == pytest.approx(2.0)  # rung-0 mean untouched
+    assert est.mean == pytest.approx(1.8)  # all-rung mean absorbs every retire
+    est.observe(-1.0)  # non-positive observations are ignored
+    assert est.mean == pytest.approx(1.8)
+
+
+def test_estimator_prior_seeds_rung0():
+    est = ServiceRateEstimator(slots=4, prior=0.25, n_rungs=3)
+    assert est.service_s(0) == pytest.approx(0.25)
+    assert est.service_s(2, scale=0.25) == pytest.approx(0.0625)
+
+
+# ------------------------------------------------- admission decide() policy
+
+
+def _controller():
+    ac = AdmissionController(
+        [Rung(96, scale=1.0), Rung(48, scale=0.5), Rung(24, scale=0.25)],
+        slots=4, alpha=1.0)
+    ac.estimator.observe(0.1, level=0)
+    return ac
+
+
+def test_decide_demotes_before_shedding():
+    ac = _controller()
+    # full budget: rung 0, no counters
+    assert ac.decide(elapsed=0.0, slo_s=1.0) == 0
+    assert (ac.n_demoted, ac.n_shed) == (0, 0)
+    # budget fits rung 1 but not rung 0
+    assert ac.decide(elapsed=0.93, slo_s=1.0) == 1
+    # only the cheapest rung fits
+    assert ac.decide(elapsed=0.97, slo_s=1.0) == 2
+    assert (ac.n_demoted, ac.n_shed) == (2, 0)
+    # shed strictly AFTER demotion is exhausted
+    assert ac.decide(elapsed=0.999, slo_s=1.0) is None
+    assert (ac.n_demoted, ac.n_shed) == (2, 1)
+
+
+def test_decide_no_slo_and_base_level():
+    ac = _controller()
+    assert ac.decide(elapsed=5.0, slo_s=None) == 0  # no budget: never demote
+    assert ac.decide(elapsed=5.0, slo_s=None, base_level=2) == 2
+    # a class's base level is where the walk STARTS
+    assert ac.decide(elapsed=0.93, slo_s=1.0, base_level=1) == 1
+    assert ac.n_demoted == 0  # serving at its own base is not a demotion
+
+
+def test_decide_shed_false_serves_best_effort():
+    ac = AdmissionController([Rung(96), Rung(24, scale=0.25)], slots=4,
+                             shed=False, alpha=1.0)
+    ac.estimator.observe(0.1)
+    assert ac.decide(elapsed=0.999, slo_s=1.0) == 1  # past budget: cheapest
+    assert (ac.n_demoted, ac.n_shed) == (1, 0)
+
+
+def test_decide_queue_wait_counts_against_budget():
+    ac = _controller()
+    assert ac.decide(elapsed=0.0, slo_s=0.15, queue_wait=0.0) == 0
+    # predicted queue wait eats the budget: rung 0 (0.1 s) no longer fits
+    # but rung 1 (0.05 s) does
+    assert ac.decide(elapsed=0.0, slo_s=0.15, queue_wait=0.08) == 1
+
+
+def test_decide_margin_adds_planning_slack():
+    # remaining 0.12 s fits rung 0's bare mean (0.1 s) ...
+    ac = _controller()
+    assert ac.decide(elapsed=0.88, slo_s=1.0) == 0
+    # ... but not with a 1.5x slack: the marginal admit becomes a demotion
+    ac = AdmissionController(
+        [Rung(96, scale=1.0), Rung(48, scale=0.5), Rung(24, scale=0.25)],
+        slots=4, alpha=1.0, margin=1.5)
+    ac.estimator.observe(0.1, level=0)
+    assert ac.decide(elapsed=0.88, slo_s=1.0) == 1
+    assert ac.n_demoted == 1
+    with pytest.raises(ValueError, match="margin"):
+        AdmissionController([Rung(96)], slots=4, margin=0.0)
+
+
+# ------------------------------------------------------- scheduler-level QoS
+
+
+def test_scheduler_sheds_only_past_budget(setup):
+    idx, spec, Q = setup
+    ladder = [spec, spec.replace(ef_search=24)]
+    # a 10s service prior dwarfs any ms-scale SLO: every rung is predicted
+    # past budget, so everything is shed at admission without a search
+    sch = idx.scheduler(spec=spec, ladder=ladder, slo_ms=1.0,
+                        service_prior=10.0)
+    res = sch.run_stream(Q)
+    assert all(r.shed and r.level == -1 for r in res)
+    assert all(r.ids[0] == -1 and not np.isfinite(r.dists[0]) for r in res)
+    assert sch.qos_stats["shed"] == len(Q)
+    # shed=False: the same hopeless budget serves best-effort at the
+    # cheapest rung instead — demote-before-shed with shedding disabled
+    sch_be = idx.scheduler(spec=spec, ladder=ladder, slo_ms=1.0,
+                           service_prior=10.0, shed=False)
+    res_be = sch_be.run_stream(Q)
+    assert not any(r.shed for r in res_be)
+    assert all(r.level == 1 for r in res_be)
+    assert sch_be.qos_stats["shed"] == 0
+    assert sch_be.qos_stats["demoted"] == len(Q)
+    # an ample budget sheds nothing and never demotes
+    sch_ok = idx.scheduler(spec=spec, ladder=ladder, slo_ms=60_000.0,
+                           service_prior=1e-6)
+    res_ok = sch_ok.run_stream(Q)
+    assert not any(r.shed for r in res_ok)
+    assert all(r.level == 0 for r in res_ok)
+
+
+def test_tick_cost_clock_is_deterministic(setup):
+    """``tick_cost`` replaces the measured per-tick wall time with a fixed
+    virtual cost: two runs over the same trace must agree on every
+    timestamp exactly (the overload bench's reproducibility contract)."""
+    idx, spec, Q = setup
+    arr = np.arange(len(Q)) * 2e-3
+    runs = []
+    for _ in range(2):
+        sch = idx.scheduler(spec=spec, ladder=demotion_ladder(spec,
+                                                              max_rungs=2),
+                            slo_ms=50.0)
+        sch.warmup(Q[0])
+        runs.append(sch.run_stream(Q, arrivals=arr, warm=False,
+                                   tick_cost=1e-3))
+    for a, b in zip(*runs):
+        assert (a.t_admit, a.t_done, a.level) == (b.t_admit, b.t_done, b.level)
+        np.testing.assert_array_equal(a.ids, b.ids)
+    # timestamps advance in whole ticks past the arrival offsets
+    assert all(r.t_done > r.t_arrival for r in runs[0])
+    with pytest.raises(ValueError, match="tick_cost"):
+        sch.run_stream(Q, realtime=True, tick_cost=1e-3)
+
+
+def test_demotion_parity_bit_identical(setup):
+    """A request served at rung 1 (ef 24) must return exactly what a fresh
+    submit against a scheduler COMPILED at ef=24 returns — demotion changes
+    the operating point, never the search semantics."""
+    idx, spec, Q = setup
+    ladder = demotion_ladder(spec, max_rungs=2)  # ef 48, 24
+    sch = idx.scheduler(spec=spec, ladder=ladder)
+    sch.warmup(Q[0])
+    for i in range(len(Q)):
+        sch.submit(Q[i], rid=i, level=1)
+    demoted = {r.rid: r for r in sch.drain()}
+
+    low = idx.scheduler(spec=spec.replace(ef_search=ladder[1].ef_search))
+    low.warmup(Q[0])
+    for i in range(len(Q)):
+        low.submit(Q[i], rid=i)
+    fresh = {r.rid: r for r in low.drain()}
+
+    for i in range(len(Q)):
+        np.testing.assert_array_equal(demoted[i].ids, fresh[i].ids)
+        np.testing.assert_array_equal(demoted[i].dists, fresh[i].dists)
+        assert demoted[i].n_evals == fresh[i].n_evals
+        assert demoted[i].hops == fresh[i].hops
+        assert demoted[i].level == 1
+
+
+def test_rung0_parity_with_legacy_scheduler(setup):
+    """A multi-rung scheduler serving everything at rung 0 is bit-identical
+    to the single-rung (legacy) scheduler — the QoS machinery must cost
+    nothing when unused."""
+    idx, spec, Q = setup
+    sch = idx.scheduler(spec=spec, ladder=demotion_ladder(spec, max_rungs=2))
+    res_qos = sch.run_stream(Q)
+    res_legacy = idx.scheduler(spec=spec).run_stream(Q)
+    for a, b in zip(res_qos, res_legacy):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+        assert (a.n_evals, a.hops) == (b.n_evals, b.hops)
+
+
+def test_tenant_fairness_under_skew(setup):
+    """10:1 offered-load skew, equal weights: DRR must keep admitting the
+    minority tenant — bounded by alternation, not drowned by the flood."""
+    idx, spec, Q = setup
+    n1 = 10  # minority tenant requests; majority floods 10x that
+    reps = np.concatenate([np.tile(Q, (10, 1)), Q[:n1]])
+    tenants = np.concatenate([np.zeros(10 * len(Q), np.int64),
+                              np.ones(n1, np.int64)])
+    sch = idx.scheduler(spec=spec)
+    sch.warmup(Q[0])
+    # majority submits first: strict FIFO would admit all 240 before any
+    # minority request
+    for i in range(len(reps)):
+        sch.submit(reps[i], rid=i, tenant=int(tenants[i]))
+    res = sch.drain()
+    t_admit = {r.rid: r.t_admit for r in res}
+    last_minority = max(t_admit[r.rid] for r in res if r.tenant == 1)
+    majority_before = sum(
+        1 for r in res if r.tenant == 0 and t_admit[r.rid] < last_minority)
+    # round-robin alternation: per admission round the minority gets one of
+    # every two grants while it has work, so at most ~n1 majority requests
+    # (plus one tick's slot slack) are admitted strictly before its last
+    assert majority_before <= 2 * n1 + sch.S, (
+        f"minority starved: {majority_before} majority admissions before "
+        f"its last request")
+    # FIFO within a tenant is preserved
+    minority = [r for r in sorted(res, key=lambda r: r.rid) if r.tenant == 1]
+    admits = [t_admit[r.rid] for r in minority]
+    assert admits == sorted(admits)
+
+
+def test_tenant_weights_bias_grants(setup):
+    """tenant_weights=3:1 admits roughly 3 majority-tenant requests per
+    minority request while both queues are backlogged."""
+    idx, spec, Q = setup
+    n = len(Q)
+    reps = np.concatenate([Q, Q])
+    tenants = np.concatenate([np.zeros(n, np.int64), np.ones(n, np.int64)])
+    sch = idx.scheduler(spec=spec, tenant_weights={0: 3.0, 1: 1.0})
+    sch.warmup(Q[0])
+    for i in range(len(reps)):
+        sch.submit(reps[i], rid=i, tenant=int(tenants[i]))
+    res = sch.drain()
+    t_admit = {r.rid: r.t_admit for r in res}
+    # look at the first half of admissions (both tenants still backlogged)
+    order = sorted(res, key=lambda r: (t_admit[r.rid], r.rid))
+    head = order[: n // 2]
+    n0 = sum(1 for r in head if r.tenant == 0)
+    n1 = sum(1 for r in head if r.tenant == 1)
+    assert n0 > n1, f"weight-3 tenant admitted {n0} vs {n1}"
+
+
+def test_priority_classes_strict_within_tenant(setup):
+    """Within a tenant, a lower-numbered class is always admitted first."""
+    idx, spec, Q = setup
+    sch = idx.scheduler(spec=spec)
+    sch.warmup(Q[0])
+    # interleave submissions so arrival order cannot explain the result
+    for i in range(len(Q)):
+        sch.submit(Q[i], rid=i, priority=i % 2)
+    res = sch.drain()
+    t_admit = {r.rid: r.t_admit for r in res}
+    hi = [t_admit[r.rid] for r in res if r.priority == 0]
+    lo = [t_admit[r.rid] for r in res if r.priority == 1]
+    # every high-priority request is admitted no later than the last
+    # low-priority one, and the earliest grants go to class 0
+    assert max(hi) <= max(lo)
+    assert min(hi) <= min(lo)
+
+
+# ------------------------------------------------ idle-tick background work
+
+
+def test_background_compaction_interleaves_safely(setup):
+    """Idle ticks run compact_slice without corrupting in-flight slots;
+    tombstones stay invisible (killed_epoch guard) and the repair debt
+    drains to zero."""
+    idx, spec, Q = setup
+    spec_m = spec.replace(capacity=N_DB + 8)
+    X = lda_like_histograms(jax.random.PRNGKey(7), N_DB + N_Q, DIM)
+    Qm, db = split_queries(X, N_Q, jax.random.PRNGKey(8))
+    Qm = np.asarray(Qm)
+    midx = ANNIndex.build(db, spec=spec_m, key=jax.random.PRNGKey(9))
+    online = midx.online
+    rng = np.random.default_rng(3)
+    dead = rng.choice(N_DB, 60, replace=False)
+    midx.delete(dead)
+    assert online.compaction_debt > 0
+
+    sch = midx.scheduler(spec=spec_m, background=True)
+    # sparse arrivals force idle gaps between requests -> background slices
+    res = sch.run_stream(Qm, arrivals=np.arange(N_Q) * 1.0)
+    for _ in range(200):
+        if not online.compaction_debt:
+            break
+        sch.tick()
+    assert online.compaction_debt == 0
+    dead_set = set(int(i) for i in dead)
+    for r in res:
+        assert not r.shed
+        live = r.ids[r.ids >= 0]
+        assert not dead_set.intersection(live.tolist()), (
+            "tombstoned id surfaced mid-compaction")
+    # the incrementally compacted graph serves identically to one compacted
+    # offline in a single call
+    ref = ANNIndex.build(db, spec=spec_m, key=jax.random.PRNGKey(9))
+    ref.delete(dead)
+    ref.compact()
+    np.testing.assert_array_equal(np.asarray(online.adj),
+                                  np.asarray(ref.online.adj))
+
+
+def test_background_hook_never_preempts_pending_work(setup):
+    """The hook fires on idle/spare-capacity ticks only — never while the
+    admission queue holds requests that could use the host's attention."""
+    idx, spec, Q = setup
+    calls = []
+
+    def hook():
+        calls.append(sch.n_pending)
+
+    sch = SlotScheduler(
+        idx.dist, sch_graph_fn(idx), dim=DIM, slots=spec.slots, ef=EF, k=K,
+        frontier=spec.sched_frontier, use_pallas=False, background_fn=hook)
+    sch.run_stream(Q, arrivals=np.arange(len(Q)) * 0.5)
+    assert calls, "idle gaps in the trace should have fired the hook"
+    assert all(p == 0 for p in calls)
+
+
+def sch_graph_fn(idx):
+    return idx.scheduler().graph_fn
+
+
+# ------------------------------------------------------- ladder + class map
+
+
+def test_demotion_ladder_synthesized_and_floor():
+    spec = RetrievalSpec(distance="kl", k=10, ef_search=96)
+    lad = demotion_ladder(spec)
+    assert [s.ef_search for s in lad] == [96, 48, 24]
+    assert lad[0] is spec
+    # floor respects k_c and the explicit floor_ef
+    spec_rr = RetrievalSpec(distance="kl", build_policy="min",
+                            search_policy="min", k=10, k_c=30, ef_search=96)
+    assert [s.ef_search for s in demotion_ladder(spec_rr)] == [96, 48]
+    assert [s.ef_search for s in demotion_ladder(spec, floor_ef=40)] == [96, 48]
+
+
+def test_demotion_ladder_from_artifact_frontier():
+    spec = RetrievalSpec(distance="kl", k=10, ef_search=96)
+    frontier = [
+        {"spec": spec.replace(ef_search=32).to_dict(), "recall": 0.9},
+        {"spec": spec.replace(ef_search=64).to_dict(), "recall": 0.95},
+        # different build side: must be filtered out
+        {"spec": spec.replace(ef_search=48, NN=5).to_dict(), "recall": 0.9},
+        # at/above the serving point: not a demotion
+        {"spec": spec.replace(ef_search=96).to_dict(), "recall": 0.99},
+    ]
+    lad = demotion_ladder(spec, {"frontier": frontier})
+    assert [s.ef_search for s in lad] == [96, 64, 32]
+
+
+def test_class_spec_clamps():
+    spec = RetrievalSpec(distance="kl", k=10, ef_search=96)
+    lad = demotion_ladder(spec)
+    assert class_spec(lad, 0) is lad[0]
+    assert class_spec(lad, 1) is lad[1]
+    assert class_spec(lad, 99) is lad[-1]
+    assert class_spec(lad, -3) is lad[0]
+
+
+def test_scheduler_ladder_validation(setup):
+    idx, spec, Q = setup
+    with pytest.raises(ValueError, match="rung 0"):
+        SlotScheduler(get_distance("kl"), idx.scheduler().graph_fn, dim=DIM,
+                      slots=4, ef=EF, k=K, ladder=[Rung(ef=24)])
+    with pytest.raises(ValueError, match="non-increasing"):
+        SlotScheduler(get_distance("kl"), idx.scheduler().graph_fn, dim=DIM,
+                      slots=4, ef=EF, k=K,
+                      ladder=[Rung(ef=EF), Rung(ef=24), Rung(ef=32)])
+    with pytest.raises(ValueError, match="outside"):
+        SlotScheduler(get_distance("kl"), idx.scheduler().graph_fn, dim=DIM,
+                      slots=4, ef=EF, k=K, ladder=[Rung(ef=EF), Rung(ef=4)])
+    with pytest.raises(ValueError, match="k"):
+        idx.scheduler(spec=spec, ladder=[spec, spec.replace(k=5,
+                                                            ef_search=24)])
+    with pytest.raises(ValueError, match="weight"):
+        idx.scheduler(spec=spec, tenant_weights={0: 0.0})
+    with pytest.raises(ValueError, match="mutable"):
+        idx.scheduler(spec=spec, background=True)  # frozen index

@@ -70,7 +70,7 @@ def _spec_doc():
 
 def test_identical_runs_pass():
     for doc in (_engine_doc(), _build_doc(), _online_doc(), _serve_doc(),
-                _spec_doc()):
+                _spec_doc(), _overload_doc()):
         rows, failures, _ = compare(doc, copy.deepcopy(doc), qps_tol=0.15, recall_tol=0.005)
         assert rows and not failures
 
@@ -252,6 +252,70 @@ def test_autotune_schema_gates_tuned_recall_and_eval_headroom():
     _, failures, _ = compare(_autotune_doc(), _autotune_doc(), qps_tol=0.2,
                              recall_tol=0.005)
     assert not failures
+
+
+def _overload_doc():
+    return {
+        "overload": [
+            {"utilization": 0.3, "offered_qps": 553.0, "in_slo_admission": 1.0,
+             "in_slo_fifo": 1.0, "in_slo_ratio": 1.0, "goodput_qps": 546.2,
+             "goodput_fifo_qps": 543.9, "in_slo_class0": 1.0,
+             "in_slo_class1": 1.0, "shed_frac": 0.0, "demoted": 0,
+             "in_slo_spread": 0.0021, "goodput_frac_of_peak": 0.3428},
+            {"utilization": 1.2, "offered_qps": 2213.0, "in_slo_admission": 0.799,
+             "in_slo_fifo": 0.226, "in_slo_ratio": 3.5, "goodput_qps": 1593.5,
+             "goodput_fifo_qps": 356.6, "in_slo_class0": 0.875,
+             "in_slo_class1": 0.342, "shed_frac": 0.09, "demoted": 3,
+             "in_slo_spread": 0.031, "goodput_frac_of_peak": 1.0},
+        ],
+        "overload_meta": {"capacity_qps": 1844.0, "slo_ms": 17.36, "tenants": 2},
+    }
+
+
+def test_overload_schema_abs_gates_in_slo_and_relative_goodput():
+    """Per utilization point the admission in-SLO fraction is gated at an
+    ABSOLUTE 0.1 tolerance (a bounded rate: relative gates never trip at
+    1.0 and over-trip near zero) and goodput-frac-of-peak relatively; the
+    FIFO columns are context, never gated."""
+    # within the abs tolerance: quiet
+    fresh = _overload_doc()
+    fresh["overload"][1]["in_slo_admission"] -= 0.09
+    _, failures, _ = compare(_overload_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert not failures
+    # beyond it: exactly that utilization point fails
+    fresh = _overload_doc()
+    fresh["overload"][1]["in_slo_admission"] -= 0.12
+    _, failures, _ = compare(_overload_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert [(f["metric"], f["config"]) for f in failures] == [
+        ("in_slo_admission", "utilization=1.2")
+    ]
+    # goodput share of peak collapsing past saturation: relative gate fires
+    fresh = _overload_doc()
+    fresh["overload"][1]["goodput_frac_of_peak"] *= 0.8
+    _, failures, cal = compare(_overload_doc(), fresh, qps_tol=0.15,
+                               recall_tol=0.005, calibrate=True)
+    assert [f["metric"] for f in failures] == ["goodput_frac_of_peak"]
+    assert cal == 1.0  # calibration=None schema
+    # a degraded FIFO baseline alone never trips the gate
+    fresh = _overload_doc()
+    fresh["overload"][1]["in_slo_fifo"] = 0.05
+    fresh["overload"][1]["goodput_fifo_qps"] = 80.0
+    _, failures, _ = compare(_overload_doc(), fresh, qps_tol=0.15, recall_tol=0.005)
+    assert not failures
+
+
+def test_overload_spread_echoed_into_summary(tmp_path):
+    """The measured best-of-N in-SLO spread rides along in the step summary
+    so flaky-looking gate trips can be triaged without re-running."""
+    doc = _overload_doc()
+    pb, pf = tmp_path / "base.json", tmp_path / "fresh.json"
+    pb.write_text(json.dumps(doc))
+    pf.write_text(json.dumps(doc))
+    summary = tmp_path / "summary.md"
+    assert main(["--pair", str(pb), str(pf), "--summary", str(summary)]) == 0
+    text = summary.read_text()
+    assert "measured in_slo_spread" in text
+    assert "utilization=1.2: 0.031" in text
 
 
 def test_only_matching_configs_compared():

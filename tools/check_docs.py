@@ -7,7 +7,9 @@ Checks, over every ``README.md`` and ``docs/*.md``:
   * relative markdown links ``[text](target)`` resolve to an existing file
     or directory (http(s)/mailto/#anchor targets are skipped, fragments
     stripped);
-  * inline-code references to ``BENCH_*`` artifacts name a committed file
+  * inline-code references to ``BENCH_*`` artifacts name a canonical
+    artifact (``KNOWN_ARTIFACTS`` — the set ``benchmarks/run.py``
+    produces; extend the list when adding a bench) or a committed file
     (repo root or ``benchmarks/baselines/``);
   * inline-code path references (``benchmarks/compare_bench.py``,
     ``tests/test_spec.py::test_name``, ``launch/serve.py``) exist —
@@ -38,6 +40,20 @@ MODULE_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
 BENCH_RE = re.compile(r"\bBENCH_[A-Za-z0-9_]+\b")
 
 SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+# canonical bench artifacts (stem, no .json) produced by benchmarks/run.py.
+# Docs may cite any of these even before a freshly generated root copy is
+# committed; anything else must exist on disk (repo root or the quick
+# baselines).  New benches extend this list — no per-name special cases.
+KNOWN_ARTIFACTS = frozenset({
+    "BENCH_autotune",
+    "BENCH_beam_engine",
+    "BENCH_build_engine",
+    "BENCH_online",
+    "BENCH_overload",
+    "BENCH_serve",
+    "BENCH_spec",
+})
 
 
 def _strip_fences(text: str) -> str:
@@ -105,6 +121,8 @@ def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
                     )
 
         for bench in BENCH_RE.findall(span):
+            if bench.removesuffix(".json") in KNOWN_ARTIFACTS:
+                continue
             name = bench if bench.endswith(".json") else None
             hits = [
                 root / f"{bench}.json",
