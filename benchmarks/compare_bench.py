@@ -104,6 +104,22 @@ SCHEMAS = {
                          {"in_slo_admission": 0.1}),
         },
     },
+    # sharded scatter-gather serving (bench_sharded): all gated metrics are
+    # measured on the deterministic virtual tick clock, so no calibration.
+    # "sharded" gates recall@10 (abs, vs its own baseline; the bench itself
+    # hard-asserts the 0.005 gap vs the replicated run) and p99_headroom =
+    # 1.5 x p99_single / p99_sharded (relative; >= 1 means the acceptance
+    # bound holds).  single_shard is the latency anchor, replicated the
+    # recall anchor — recorded, recall-gated where present, not
+    # throughput-gated.
+    "sharded": {
+        "calibration": None,
+        "sections": {
+            "single_shard": ((), None),
+            "replicated": ((), None),
+            "sharded": ((), "p99_headroom"),
+        },
+    },
     # spec auto-tuner (bench_autotune): the tuned spec must keep matching or
     # beating the hand-tuned anchor.  Both sections' recall@10 are gated;
     # "tuned" additionally gates eval_headroom = hand_evals / tuned_evals —

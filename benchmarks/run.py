@@ -19,7 +19,7 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=[None, "table3", "fig12", "kernels", "engine",
                              "build", "online", "serve", "overload", "spec",
-                             "autotune"])
+                             "autotune", "sharded"])
     ap.add_argument("--n-db", type=int, default=None)
     ap.add_argument("--n-q", type=int, default=None)
     args = ap.parse_args()
@@ -63,6 +63,12 @@ def main():
         from . import bench_serve
 
         bench_serve.run_overload(quick=args.quick)
+
+    if args.only in (None, "sharded"):
+        print("\n=== sharded: scatter-gather slot scheduler vs one device ===")
+        from . import bench_sharded
+
+        bench_sharded.run_sharded(quick=args.quick)
 
     if args.only in (None, "spec"):
         print("\n=== spec: Blend(alpha) construction-distance sweep ===")

@@ -44,6 +44,13 @@ from .batched_beam import (
     select_entries,
 )
 from .scheduler import GraphView, SlotResult, SlotScheduler
+from .distributed import (
+    ShardedSlotScheduler,
+    build_local_subgraphs,
+    pad_to_shards,
+    sharded_graph_search,
+    sharded_knn_scan,
+)
 from .swgraph import build_swgraph
 from .build_engine import build_sharded, build_swgraph_wave, reverse_edge_merge
 from .nndescent import build_nndescent

@@ -316,6 +316,15 @@ def build_sharded(
     for a in db_axes:
         n_shards *= int(mesh.shape[a])
     n = X_sharded.shape[0]
+    if n % n_shards:
+        # build_sharded emits a GLOBAL-id stitched graph for replicated
+        # search, so wrap-around padding (which would mint duplicate global
+        # ids) does not apply — unlike distributed.build_local_subgraphs,
+        # which pads.  Refuse loudly instead of silently dropping rows.
+        raise ValueError(
+            f"build_sharded needs n ({n}) divisible by the shard count "
+            f"({n_shards}); pad the corpus or use "
+            f"distributed.build_local_subgraphs for scatter-gather serving")
     n_local = n // n_shards
     key = key if key is not None else jax.random.PRNGKey(0)
 

@@ -290,7 +290,210 @@ class AdmissionController:
         return last
 
 
-class SlotScheduler:
+class SchedulerHost:
+    """Host-side serving machinery shared by every slot scheduler.
+
+    Owns the pending-request queues (per-tenant DRR with strict priority
+    within a tenant), request submission, and the drain / warmup /
+    ``run_stream`` drivers.  Subclasses — the single-device
+    ``SlotScheduler`` and the scatter-gather
+    ``repro.core.distributed.ShardedSlotScheduler`` — provide the device
+    state plus ``tick(now)`` / ``reset()``, the ``dim`` / ``rungs`` /
+    ``slo_s`` attributes, the host-side ``_slot_rid`` occupancy array and
+    an optional ``_background`` idle hook; everything here is
+    device-layout agnostic.
+    """
+
+    def _init_host_queue(self, tenant_weights=None):
+        """Validate tenant weights and create the (empty) queue state."""
+        self._rid_gen = itertools.count()
+        self._weights = {int(t): float(w)
+                         for t, w in (tenant_weights or {}).items()}
+        for t, w in self._weights.items():
+            if not w > 0:
+                raise ValueError(f"tenant {t} weight must be > 0, got {w}")
+        self._queues: dict[int, dict[int, collections.deque]] = {}
+        self._tenant_order: list[int] = []
+        self._deficit: dict[int, float] = {}
+        self._n_pending = 0
+
+    def _clear_host_queue(self):
+        self._queues.clear()
+        self._tenant_order.clear()
+        self._deficit.clear()
+        self._n_pending = 0
+
+    @property
+    def n_inflight(self) -> int:
+        return int((self._slot_rid >= 0).sum())
+
+    @property
+    def n_pending(self) -> int:
+        return self._n_pending
+
+    def submit(self, q, rid: Optional[int] = None, t_arrival: float = 0.0, *,
+               tenant: int = 0, priority: int = 0,
+               slo_ms: Optional[float] = None,
+               level: Optional[int] = None) -> int:
+        """Enqueue one query row ``q`` of shape (dim,).
+
+        ``rid`` (optional) names the request; auto-assigned from a counter
+        otherwise.  ``t_arrival`` is echoed into the eventual
+        ``SlotResult`` for latency accounting.  ``tenant`` selects the DRR
+        fairness queue; ``priority`` is the QoS class (0 = highest; class p
+        starts at demotion-ladder rung min(p, len(ladder)-1) and within a
+        tenant strictly precedes higher-numbered classes).  ``slo_ms``
+        overrides the scheduler's default SLO budget for this request;
+        ``level`` pins an explicit operating point, bypassing admission
+        control.  Returns the request id.
+        """
+        if rid is None:
+            rid = next(self._rid_gen)
+        tenant, priority = int(tenant), max(0, int(priority))
+        slo_s = self.slo_s if slo_ms is None else float(slo_ms) / 1e3
+        if level is not None:
+            level = min(max(int(level), 0), len(self.rungs) - 1)
+        tq = self._queues.get(tenant)
+        if tq is None:
+            tq = self._queues[tenant] = {}
+            self._tenant_order.append(tenant)
+            self._deficit[tenant] = 0.0
+        dq = tq.get(priority)
+        if dq is None:
+            dq = tq[priority] = collections.deque()
+        dq.append(_Request(int(rid), np.asarray(q), float(t_arrival), tenant,
+                           priority, slo_s, level))
+        self._n_pending += 1
+        return int(rid)
+
+    def _tenant_pending(self, tenant: int) -> bool:
+        return any(self._queues[tenant][p] for p in self._queues[tenant])
+
+    def _pop_tenant(self, tenant: int) -> _Request:
+        tq = self._queues[tenant]
+        for prio in sorted(tq):
+            if tq[prio]:
+                self._n_pending -= 1
+                return tq[prio].popleft()
+        raise LookupError(f"tenant {tenant} has no pending requests")
+
+    def _drr_select(self, n: int) -> list[_Request]:
+        """Pop up to ``n`` requests across the tenant queues.
+
+        Deficit round-robin with per-tenant weights (quantum = weight, cost
+        1 per request) over tenants in first-seen order; strict priority
+        order within a tenant.  A tenant's deficit resets when its queue
+        drains, so burst credit cannot be banked — the classic DRR
+        starvation bound (at most one quantum of lag per competitor over
+        any window) holds no matter how hot one tenant runs.
+        """
+        out: list[_Request] = []
+        while len(out) < n and self._n_pending:
+            active = [t for t in self._tenant_order if self._tenant_pending(t)]
+            for t in active:
+                self._deficit[t] += self._weights.get(t, 1.0)
+            for t in active:
+                while (len(out) < n and self._deficit[t] >= 1.0
+                       and self._tenant_pending(t)):
+                    out.append(self._pop_tenant(t))
+                    self._deficit[t] -= 1.0
+                if not self._tenant_pending(t):
+                    self._deficit[t] = 0.0
+        return out
+
+    def drain(self, now: float = 0.0) -> list[SlotResult]:
+        """Run ticks until the queue and every slot are empty."""
+        out = []
+        while self._n_pending or (self._slot_rid >= 0).any():
+            out.extend(self.tick(now))
+        return out
+
+    def warmup(self, q=None):
+        """Compile the admit/step/retire paths outside any timed region."""
+        if q is None:
+            q = np.full((self.dim,), 1.0 / self.dim, np.float32)
+        self.submit(np.asarray(q))
+        self.drain()
+        self.reset()
+
+    def run_stream(self, Q, arrivals=None, realtime: bool = False,
+                   warm: bool = True, tenants=None, priorities=None,
+                   slo_ms: Optional[float] = None,
+                   tick_cost: Optional[float] = None) -> list[SlotResult]:
+        """Serve a request stream with per-request arrival times.
+
+        ``arrivals=None`` submits everything at t=0 (a closed batch).  By
+        default the clock is VIRTUAL: it advances only by the measured
+        compute time of each tick, so latency percentiles reflect scheduler
+        behavior rather than host sleep jitter; ``realtime=True`` uses the
+        wall clock and sleeps through idle gaps instead (the serving
+        driver's mode).  ``tick_cost`` (exclusive with ``realtime``)
+        advances the virtual clock by a FIXED cost per tick instead of the
+        measured one — the lock-step tick runs full-batch compute
+        regardless of slot occupancy, so a constant cost is faithful, and
+        arrivals/SLOs expressed in the same unit make queueing behavior
+        deterministic and machine-independent (the overload bench's mode).
+        ``tenants``/``priorities`` (optional per-request arrays) and
+        ``slo_ms`` (stream-wide SLO override) forward to ``submit``.
+        Returns results ordered by request index, with
+        ``t_arrival``/``t_admit``/``t_done`` filled in on the chosen clock;
+        load-shed requests come back with ``shed=True``.
+        """
+        if realtime and tick_cost is not None:
+            raise ValueError("tick_cost is a virtual-clock mode; "
+                             "incompatible with realtime=True")
+        Q = np.asarray(Q)
+        n_req = Q.shape[0]
+        if arrivals is None:
+            arrivals = np.zeros((n_req,), float)
+        arrivals = np.asarray(arrivals, float)
+        order = np.argsort(arrivals, kind="stable")
+        if warm:
+            self.warmup(Q[0])
+        else:
+            self.reset()
+        results: dict[int, SlotResult] = {}
+        t0 = time.perf_counter()
+        clock = 0.0
+        i = 0
+        while len(results) < n_req:
+            if realtime:
+                clock = time.perf_counter() - t0
+            while i < n_req and arrivals[order[i]] <= clock:
+                rid = int(order[i])
+                self.submit(
+                    Q[rid], rid=rid, t_arrival=float(arrivals[rid]),
+                    tenant=0 if tenants is None else int(tenants[rid]),
+                    priority=0 if priorities is None else int(priorities[rid]),
+                    slo_ms=slo_ms,
+                )
+                i += 1
+            if not self._n_pending and not (self._slot_rid >= 0).any():
+                # idle: background maintenance, then jump (or sleep) to the
+                # next arrival
+                if self._background is not None:
+                    self._background()
+                nxt = float(arrivals[order[i]])
+                if realtime:
+                    time.sleep(max(0.0, nxt - (time.perf_counter() - t0)))
+                else:
+                    clock = nxt
+                continue
+            tick_t0 = time.perf_counter()
+            finished = self.tick(now=clock)
+            if realtime:
+                clock = time.perf_counter() - t0
+            elif tick_cost is not None:
+                clock += tick_cost
+            else:
+                clock += time.perf_counter() - tick_t0
+            for r in finished:
+                r.t_done = clock
+                results[r.rid] = r
+        return [results[j] for j in range(n_req)]
+
+
+class SlotScheduler(SchedulerHost):
     """Slot-recycling continuous-batching searcher over a neighborhood graph.
 
     Parameters
@@ -377,7 +580,6 @@ class SlotScheduler:
         self._dtype = jax.tree.leaves(g.consts)[0].dtype
         self._use_pallas = use_pallas
         self._kernel_ok = isinstance(dist, Distance) and use_pallas is not False
-        self._rid_gen = itertools.count()
 
         # ---- QoS: demotion ladder, admission control, tenant fairness
         rungs = [r if isinstance(r, Rung) else Rung(**r) for r in ladder or []]
@@ -404,16 +606,8 @@ class SlotScheduler:
         self.admission = AdmissionController(
             rungs, self.S, shed=shed, alpha=service_alpha,
             prior=service_prior, margin=admission_margin)
-        self._weights = {int(t): float(w)
-                         for t, w in (tenant_weights or {}).items()}
-        for t, w in self._weights.items():
-            if not w > 0:
-                raise ValueError(f"tenant {t} weight must be > 0, got {w}")
         self._background = background_fn
-        self._queues: dict[int, dict[int, collections.deque]] = {}
-        self._tenant_order: list[int] = []
-        self._deficit: dict[int, float] = {}
-        self._n_pending = 0
+        self._init_host_queue(tenant_weights)
         self._build_jits()
         self.reset()
 
@@ -542,10 +736,7 @@ class SlotScheduler:
             ef_act=jnp.full((S,), self.ef, jnp.int32),
             adapt=jnp.full((S,), self.adaptive, bool),
         )
-        self._queues.clear()
-        self._tenant_order.clear()
-        self._deficit.clear()
-        self._n_pending = 0
+        self._clear_host_queue()
         # the learned service-rate estimate survives reset (it describes
         # the hardware, not the request stream); the per-run QoS counters
         # do not
@@ -560,14 +751,6 @@ class SlotScheduler:
         self._meta: dict[int, tuple] = {}
 
     @property
-    def n_inflight(self) -> int:
-        return int((self._slot_rid >= 0).sum())
-
-    @property
-    def n_pending(self) -> int:
-        return self._n_pending
-
-    @property
     def qos_stats(self) -> dict:
         """Per-run admission counters (zeroed by ``reset``)."""
         est = self.admission.estimator
@@ -579,76 +762,6 @@ class SlotScheduler:
         }
 
     # -------------------------------------------------------------- serving
-
-    def submit(self, q, rid: Optional[int] = None, t_arrival: float = 0.0, *,
-               tenant: int = 0, priority: int = 0,
-               slo_ms: Optional[float] = None,
-               level: Optional[int] = None) -> int:
-        """Enqueue one query row ``q`` of shape (dim,).
-
-        ``rid`` (optional) names the request; auto-assigned from a counter
-        otherwise.  ``t_arrival`` is echoed into the eventual
-        ``SlotResult`` for latency accounting.  ``tenant`` selects the DRR
-        fairness queue; ``priority`` is the QoS class (0 = highest; class p
-        starts at demotion-ladder rung min(p, len(ladder)-1) and within a
-        tenant strictly precedes higher-numbered classes).  ``slo_ms``
-        overrides the scheduler's default SLO budget for this request;
-        ``level`` pins an explicit operating point, bypassing admission
-        control.  Returns the request id.
-        """
-        if rid is None:
-            rid = next(self._rid_gen)
-        tenant, priority = int(tenant), max(0, int(priority))
-        slo_s = self.slo_s if slo_ms is None else float(slo_ms) / 1e3
-        if level is not None:
-            level = min(max(int(level), 0), len(self.rungs) - 1)
-        tq = self._queues.get(tenant)
-        if tq is None:
-            tq = self._queues[tenant] = {}
-            self._tenant_order.append(tenant)
-            self._deficit[tenant] = 0.0
-        dq = tq.get(priority)
-        if dq is None:
-            dq = tq[priority] = collections.deque()
-        dq.append(_Request(int(rid), np.asarray(q), float(t_arrival), tenant,
-                           priority, slo_s, level))
-        self._n_pending += 1
-        return int(rid)
-
-    def _tenant_pending(self, tenant: int) -> bool:
-        return any(self._queues[tenant][p] for p in self._queues[tenant])
-
-    def _pop_tenant(self, tenant: int) -> _Request:
-        tq = self._queues[tenant]
-        for prio in sorted(tq):
-            if tq[prio]:
-                self._n_pending -= 1
-                return tq[prio].popleft()
-        raise LookupError(f"tenant {tenant} has no pending requests")
-
-    def _drr_select(self, n: int) -> list[_Request]:
-        """Pop up to ``n`` requests across the tenant queues.
-
-        Deficit round-robin with per-tenant weights (quantum = weight, cost
-        1 per request) over tenants in first-seen order; strict priority
-        order within a tenant.  A tenant's deficit resets when its queue
-        drains, so burst credit cannot be banked — the classic DRR
-        starvation bound (at most one quantum of lag per competitor over
-        any window) holds no matter how hot one tenant runs.
-        """
-        out: list[_Request] = []
-        while len(out) < n and self._n_pending:
-            active = [t for t in self._tenant_order if self._tenant_pending(t)]
-            for t in active:
-                self._deficit[t] += self._weights.get(t, 1.0)
-            for t in active:
-                while (len(out) < n and self._deficit[t] >= 1.0
-                       and self._tenant_pending(t)):
-                    out.append(self._pop_tenant(t))
-                    self._deficit[t] -= 1.0
-                if not self._tenant_pending(t):
-                    self._deficit[t] = 0.0
-        return out
 
     def tick(self, now: float = 0.0) -> list[SlotResult]:
         """Admit pending requests into free slots (DRR across tenants,
@@ -781,96 +894,3 @@ class SlotScheduler:
             self._slot_rid[s] = -1
         self.state = self._release(self.state, jnp.asarray(finished))
         return shed_out + out
-
-    def drain(self, now: float = 0.0) -> list[SlotResult]:
-        """Run ticks until the queue and every slot are empty."""
-        out = []
-        while self._n_pending or (self._slot_rid >= 0).any():
-            out.extend(self.tick(now))
-        return out
-
-    def warmup(self, q=None):
-        """Compile the admit/step/retire paths outside any timed region."""
-        if q is None:
-            q = np.full((self.dim,), 1.0 / self.dim, np.float32)
-        self.submit(np.asarray(q))
-        self.drain()
-        self.reset()
-
-    # ----------------------------------------------------------- simulation
-
-    def run_stream(self, Q, arrivals=None, realtime: bool = False,
-                   warm: bool = True, tenants=None, priorities=None,
-                   slo_ms: Optional[float] = None,
-                   tick_cost: Optional[float] = None) -> list[SlotResult]:
-        """Serve a request stream with per-request arrival times.
-
-        ``arrivals=None`` submits everything at t=0 (a closed batch).  By
-        default the clock is VIRTUAL: it advances only by the measured
-        compute time of each tick, so latency percentiles reflect scheduler
-        behavior rather than host sleep jitter; ``realtime=True`` uses the
-        wall clock and sleeps through idle gaps instead (the serving
-        driver's mode).  ``tick_cost`` (exclusive with ``realtime``)
-        advances the virtual clock by a FIXED cost per tick instead of the
-        measured one — the lock-step tick runs full-batch compute
-        regardless of slot occupancy, so a constant cost is faithful, and
-        arrivals/SLOs expressed in the same unit make queueing behavior
-        deterministic and machine-independent (the overload bench's mode).
-        ``tenants``/``priorities`` (optional per-request arrays) and
-        ``slo_ms`` (stream-wide SLO override) forward to ``submit``.
-        Returns results ordered by request index, with
-        ``t_arrival``/``t_admit``/``t_done`` filled in on the chosen clock;
-        load-shed requests come back with ``shed=True``.
-        """
-        if realtime and tick_cost is not None:
-            raise ValueError("tick_cost is a virtual-clock mode; "
-                             "incompatible with realtime=True")
-        Q = np.asarray(Q)
-        n_req = Q.shape[0]
-        if arrivals is None:
-            arrivals = np.zeros((n_req,), float)
-        arrivals = np.asarray(arrivals, float)
-        order = np.argsort(arrivals, kind="stable")
-        if warm:
-            self.warmup(Q[0])
-        else:
-            self.reset()
-        results: dict[int, SlotResult] = {}
-        t0 = time.perf_counter()
-        clock = 0.0
-        i = 0
-        while len(results) < n_req:
-            if realtime:
-                clock = time.perf_counter() - t0
-            while i < n_req and arrivals[order[i]] <= clock:
-                rid = int(order[i])
-                self.submit(
-                    Q[rid], rid=rid, t_arrival=float(arrivals[rid]),
-                    tenant=0 if tenants is None else int(tenants[rid]),
-                    priority=0 if priorities is None else int(priorities[rid]),
-                    slo_ms=slo_ms,
-                )
-                i += 1
-            if not self._n_pending and not (self._slot_rid >= 0).any():
-                # idle: background maintenance, then jump (or sleep) to the
-                # next arrival
-                if self._background is not None:
-                    self._background()
-                nxt = float(arrivals[order[i]])
-                if realtime:
-                    time.sleep(max(0.0, nxt - (time.perf_counter() - t0)))
-                else:
-                    clock = nxt
-                continue
-            tick_t0 = time.perf_counter()
-            finished = self.tick(now=clock)
-            if realtime:
-                clock = time.perf_counter() - t0
-            elif tick_cost is not None:
-                clock += tick_cost
-            else:
-                clock += time.perf_counter() - tick_t0
-            for r in finished:
-                r.t_done = clock
-                results[r.rid] = r
-        return [results[j] for j in range(n_req)]

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -514,6 +515,86 @@ def build_and_serve(*, spec: RetrievalSpec | None = None,
     return stats
 
 
+def build_and_serve_sharded(*, distance: str = "kl", n_db: int = 4096,
+                            dim: int = 32, n_queries: int = 256, k: int = 10,
+                            ef_search: int = 96, slots: int = 32,
+                            shards: int = 4, steps_per_sync: int = 1,
+                            drop_shards: int = 0, NN: int = 15,
+                            nnd_iters: int = 8, compare_replicated: bool = True,
+                            verbose: bool = True):
+    """Scatter-gather serving: the slot scheduler over a SHARDED corpus.
+
+    Each of ``shards`` devices owns ``n_db / shards`` rows (padded when not
+    divisible) and its own local subgraph; every scheduler tick advances all
+    shards' beams in lock-step under ``shard_map`` and ends in an all_gather
+    + merge sync that rebuilds each slot's replicated global top-k.  All
+    device state is fixed-shape, so steady-state serving keeps exactly one
+    executable per jitted path (reported in the stats).
+
+    When ``compare_replicated`` is set the same trace is also served by the
+    replicated single-device ``SlotScheduler`` over one global graph of the
+    union corpus, reporting the recall gap the serving gate bounds (0.005).
+    """
+    from repro.core.distributed import (ShardedSlotScheduler,
+                                        build_local_subgraphs)
+
+    if len(jax.devices()) < shards:
+        raise RuntimeError(
+            f"--shards {shards} needs {shards} devices, found "
+            f"{len(jax.devices())}; on CPU re-run with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={shards} (the driver "
+            f"sets it automatically when the backend is not yet initialised)")
+    mesh = jax.make_mesh((shards,), ("data",))
+    key = jax.random.PRNGKey(0)
+    data = lda_like_histograms(key, n_db + n_queries, dim)
+    Q, X = split_queries(data, n_queries, jax.random.fold_in(key, 1))
+    X = X[:n_db]
+    dist = get_distance(distance)
+
+    t0 = time.time()
+    nbrs = build_local_subgraphs(mesh, dist, X, NN=NN, nnd_iters=nnd_iters,
+                                 key=jax.random.fold_in(key, 2))
+    sched = ShardedSlotScheduler(
+        mesh, dist, X, neighbors=nbrs, slots=slots, ef=ef_search, k=k,
+        steps_per_sync=steps_per_sync, drop_shards=drop_shards)
+    build_s = time.time() - t0
+
+    _, true_ids = knn_scan(dist, Q, X, k)
+    res = sched.run_stream(np.asarray(Q))
+    ids = np.stack([r.ids for r in res])
+    lat = np.asarray([r.latency for r in res])
+    evals = np.asarray([r.n_evals for r in res])
+    stats = {
+        "shards": shards,
+        "n_db": n_db,
+        "rows_per_shard": sched.n_local,
+        "build_s": round(build_s, 2),
+        "slots": slots,
+        "steps_per_sync": steps_per_sync,
+        "drop_shards": drop_shards,
+        "recall@k": round(recall_at_k(ids, np.asarray(true_ids)), 4),
+        "eval_reduction": round(speedup_model(n_db, evals), 1),
+        **latency_stats(lat),
+        # the zero-recompile contract, made observable
+        "step_executables": sched._step._cache_size(),
+        "admit_executables": sched._admit._cache_size(),
+    }
+    if compare_replicated:
+        idx = ANNIndex.build(X, dist, builder="nndescent", NN=NN,
+                             nnd_iters=nnd_iters,
+                             key=jax.random.fold_in(key, 3))
+        repl = idx.scheduler(k=k, ef_search=ef_search, slots=slots)
+        res_r = repl.run_stream(np.asarray(Q))
+        ids_r = np.stack([r.ids for r in res_r])
+        r_repl = recall_at_k(ids_r, np.asarray(true_ids))
+        stats["replicated_recall@k"] = round(r_repl, 4)
+        stats["recall_gap"] = round(r_repl - recall_at_k(
+            ids, np.asarray(true_ids)), 4)
+    if verbose:
+        print(f"[serve/sharded] dist={distance} n={n_db} x{shards} -> {stats}")
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--spec", default=None,
@@ -583,7 +664,38 @@ def main(argv=None):
                     help="comma-separated QoS class mix, highest class "
                          "first (e.g. 0.6,0.4): class p starts at demotion-"
                          "ladder rung p (QoS path, needs --slo-ms)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve scatter-gather from N corpus shards through "
+                         "the sharded slot scheduler (one device per shard; "
+                         "on CPU the driver forces N host devices via "
+                         "XLA_FLAGS before the backend initialises)")
+    ap.add_argument("--drop-shards", type=int, default=0,
+                    help="freeze the last s shards at admission (bounded-"
+                         "staleness straggler model, sharded path)")
+    ap.add_argument("--steps-per-sync", type=int, default=1,
+                    help="beam lock-steps per cross-shard sync point "
+                         "(sharded path)")
     args = ap.parse_args(argv)
+    if args.shards:
+        bad = [f for f, v in [("--spec", args.spec),
+                              ("--continuous", args.continuous or None),
+                              ("--churn-rounds", args.churn_rounds or None),
+                              ("--slo-ms", args.slo_ms)] if v]
+        if bad:
+            ap.error(f"--shards is its own serving path; incompatible "
+                     f"with {bad}")
+        # must happen before ANY backend touch: the forced device count is
+        # read once, at platform initialisation
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.shards}")
+        return build_and_serve_sharded(
+            n_db=args.n_db, dim=args.dim, n_queries=args.queries,
+            shards=args.shards, drop_shards=args.drop_shards,
+            steps_per_sync=args.steps_per_sync,
+            **{k: v for k, v in [("distance", args.distance),
+                                 ("ef_search", args.ef_search),
+                                 ("slots", args.slots)] if v is not None})
     if args.slo_ms is not None and not args.continuous:
         ap.error("--slo-ms needs --continuous (it shapes the arrival trace)")
     if (args.tenants != 1 or args.priority) and args.slo_ms is None:

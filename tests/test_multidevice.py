@@ -146,6 +146,98 @@ print(f"build_sharded stitched graph OK r={r:.3f}")
 """)
 
 
+def test_sharded_non_divisible_corpus():
+    """n % n_shards != 0: remainder rows used to be silently dropped. The
+    wrap-around padding keeps every row searchable, and padded duplicate
+    ids (>= n) never surface in results."""
+    run_script(COMMON + """
+from repro.core import get_distance, knn_scan, recall_at_k
+from repro.core.distributed import (build_local_subgraphs, pad_to_shards,
+                                    sharded_graph_search, sharded_knn_scan)
+from repro.data.synthetic import lda_like_histograms
+n = 509   # 509 % 4 == 1: three remainder rows under 4 shards
+X = lda_like_histograms(jax.random.PRNGKey(0), n, 16)
+Q = lda_like_histograms(jax.random.PRNGKey(1), 12, 16)
+dist = get_distance("kl")
+Xp, n_real, n_local = pad_to_shards(X, 4)
+assert (n_real, n_local) == (n, 128) and Xp.shape[0] == 512
+np.testing.assert_array_equal(np.asarray(Xp[n:]), np.asarray(X[:3]))
+# exact scan: padded duplicates must not displace or duplicate real rows
+want_d, want_i = knn_scan(dist, Q, X, 10)
+d, i = sharded_knn_scan(mesh, dist, Q, X, 10)
+i = np.asarray(i)
+assert i.min() >= 0 and i.max() < n
+np.testing.assert_allclose(np.asarray(d), np.asarray(want_d), rtol=1e-4)
+assert (i == np.asarray(want_i)).mean() > 0.98  # ties may reorder
+# graph search: remainder rows are reachable, no phantom/duplicate ids
+_, true_ids = knn_scan(dist, Q, X, 10)
+nbrs = build_local_subgraphs(mesh, dist, X, NN=10, nnd_iters=6)
+assert nbrs.shape[0] == 512
+dg, ig, evals = sharded_graph_search(mesh, dist, Q, X, nbrs, k=10, ef=64)
+ig = np.asarray(ig)
+assert ig.max() < n, f"padded id surfaced: {ig.max()}"
+for row in ig:
+    real = row[row >= 0]
+    assert len(np.unique(real)) == len(real), "duplicate ids in top-k"
+r = recall_at_k(ig, np.asarray(true_ids))
+assert r >= 0.85, r
+print(f"non-divisible corpus OK r={r:.3f}")
+""")
+
+
+def test_drop_shards_voids_ids_and_zeroes_evals():
+    """drop_shards used to void only distances (stale ids surfaced once k
+    exceeded the surviving pool) and psum dead shards' eval counts."""
+    run_script(COMMON + """
+from repro.core import get_distance
+from repro.core.distributed import build_local_subgraphs, sharded_graph_search
+from repro.data.synthetic import lda_like_histograms
+X = lda_like_histograms(jax.random.PRNGKey(0), 512, 16)
+Q = lda_like_histograms(jax.random.PRNGKey(1), 16, 16)
+dist = get_distance("kl")
+nbrs = build_local_subgraphs(mesh, dist, X, NN=10, nnd_iters=6)
+k, n_local = 10, 128
+d0, i0, e0 = sharded_graph_search(mesh, dist, Q, X, nbrs, k=k, ef=64)
+d1, i1, e1 = sharded_graph_search(mesh, dist, Q, X, nbrs, k=k, ef=64,
+                                  drop_shards=1)
+# dropped work must not be billed: per-query evals strictly shrink
+assert (np.asarray(e1) < np.asarray(e0)).all(), (e0, e1)
+# survivors-only ids: shard 3 (rows 384..511) is dead
+i1 = np.asarray(i1)
+assert ((i1 < 0) | (i1 < 3 * n_local)).all(), i1.max()
+# extreme dropout (1 survivor): beam width < ef means the pool can run
+# short of k — short rows must pad (inf, -1), never stale finite ids
+d3, i3, e3 = sharded_graph_search(mesh, dist, Q, X, nbrs, k=k, ef=64,
+                                  drop_shards=3)
+d3, i3 = np.asarray(d3), np.asarray(i3)
+assert ((i3 < 0) | (i3 < n_local)).all(), i3.max()
+assert ((i3 >= 0) == np.isfinite(d3)).all(), "stale id with inf distance"
+assert (np.asarray(e3) < np.asarray(e1)).all()
+print("drop_shards voiding OK")
+""")
+
+
+def test_build_local_subgraphs_shards_decorrelated():
+    """The per-shard PRNG keys fold in axis_index: identical shard contents
+    must still produce different NN-descent subgraphs per shard."""
+    run_script(COMMON + """
+from repro.core import get_distance
+from repro.core.distributed import build_local_subgraphs
+from repro.data.synthetic import lda_like_histograms
+block = lda_like_histograms(jax.random.PRNGKey(0), 128, 16)
+X = jnp.tile(block, (4, 1))   # every shard holds the SAME 128 rows
+dist = get_distance("kl")
+# few iters: a fully converged NN-descent would reach the (unique) exact
+# KNN graph on every shard regardless of seed, hiding the correlation
+nbrs = np.asarray(build_local_subgraphs(mesh, dist, X, NN=10, nnd_iters=2))
+shards = nbrs.reshape(4, 128, -1)
+diffs = [not np.array_equal(shards[a], shards[b])
+         for a in range(4) for b in range(a + 1, 4)]
+assert all(diffs), "shard subgraphs are seed-correlated (identical)"
+print("shard key decorrelation OK")
+""")
+
+
 def test_sequence_parallel_decode_exact():
     run_script(COMMON + """
 from repro.configs import get_smoke_config

@@ -52,6 +52,7 @@ KNOWN_ARTIFACTS = frozenset({
     "BENCH_online",
     "BENCH_overload",
     "BENCH_serve",
+    "BENCH_sharded",
     "BENCH_spec",
 })
 
