@@ -132,6 +132,22 @@ SCHEMAS = {
             "tuned": ((), "eval_headroom"),
         },
     },
+    # learned construction distances (bench_learned): per workload, every
+    # policy row's calibration-split recall@10 is abs-gated and the learned
+    # rows additionally gate eval_headroom = hand_evals / learned_evals
+    # (machine-independent ratio, >= 1 means the learned distance costs no
+    # more distance evals than the hand combinator — exact on this split
+    # by the trainer's clone guarantee; hand/natural rows carry no headroom
+    # and are recall-gated only).  "served" is the SlotScheduler end-to-end
+    # recall; the doc's "holdout" key is honesty data, deliberately ungated.
+    "learned": {
+        "calibration": None,
+        "sections": {
+            "two_tower": (("policy",), "eval_headroom"),
+            "bm25": (("policy",), "eval_headroom"),
+            "served": ((), None),
+        },
+    },
 }
 
 RECALL = "recall@10"

@@ -19,7 +19,7 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=[None, "table3", "fig12", "kernels", "engine",
                              "build", "online", "serve", "overload", "spec",
-                             "autotune", "sharded"])
+                             "autotune", "sharded", "learned"])
     ap.add_argument("--n-db", type=int, default=None)
     ap.add_argument("--n-q", type=int, default=None)
     args = ap.parse_args()
@@ -81,6 +81,13 @@ def main():
         from . import bench_autotune
 
         bench_autotune.run_autotune(quick=args.quick)
+
+    if args.only in (None, "learned"):
+        print("\n=== learned: trained construction distance vs the hand "
+              "combinator ===")
+        from . import bench_learned
+
+        bench_learned.run_learned(quick=args.quick)
 
     if args.only in (None, "table3"):
         print("\n=== Table 3: filter-and-refine symmetrization vs "

@@ -14,20 +14,28 @@ from .distances import (
 from .symmetrize import (
     SYM_MODES,
     CombinedDistance,
+    LearnedDistance,
     ReversedDistance,
     SymmetrizedDistance,
     ViewedDistance,
     calibrate_tau,
+    get_learned_weights,
+    learned_weights_fingerprint,
+    register_learned_weights,
     symmetrized,
 )
 from .spec import (
+    LEARNED_ARTIFACT_KIND,
     TUNED_ARTIFACT_KIND,
     Blend,
     DistancePolicy,
+    Learned,
     MaxSym,
     RankBlend,
     RetrievalSpec,
     dominates,
+    learned_artifact,
+    load_learned_artifact,
     load_spec,
     load_tuned_artifact,
     pareto_frontier,
@@ -58,4 +66,6 @@ from .online import OnlineIndex
 from .filter_refine import filter_and_refine, kc_sweep, rerank
 from .index import ANNIndex
 from .autotune import Candidate, TuneResult, autotune, build_cost_proxy, default_axes
+from .metric_learning import fit_mahalanobis_map, learn_mahalanobis, true_neighbor_ids
+from .learned import LearnedResult, fit_construction_distance, mahalanobis_weights
 from .metrics import recall_at_k, speedup_model

@@ -259,12 +259,13 @@ def _rung_sizes(n: int, n_q: int, rungs: int, min_n: int, min_q: int):
 
 
 def _evaluate_rung(specs: Sequence[RetrievalSpec], X, Q, k: int, key,
-                   verbose: bool, tag: str) -> list[Candidate]:
+                   verbose: bool, tag: str, dist=None,
+                   natural=None) -> list[Candidate]:
     """Build (shared per build-group) + search + score every spec on (X, Q)."""
     from .index import ANNIndex  # local: index imports spec, avoid a cycle
 
     n = int(X.shape[0])
-    dist = specs[0].base_distance()
+    dist = dist if dist is not None else specs[0].base_distance()
     _, true_ids = knn_scan(dist, Q, X, k)
     true_np = np.asarray(true_ids)
 
@@ -274,7 +275,8 @@ def _evaluate_rung(specs: Sequence[RetrievalSpec], X, Q, k: int, key,
         bk = _build_key(spec)
         idx = builds.get(bk)
         if idx is None:
-            idx = ANNIndex.build(X, spec=spec, key=_fold(key, "build", *bk))
+            idx = ANNIndex.build(X, dist, spec=spec,
+                                 key=_fold(key, "build", *bk), natural=natural)
             builds[bk] = idx
         search = idx.searcher(spec=spec)
         _, ids, n_evals, _ = search(Q)
@@ -300,6 +302,7 @@ def autotune(X, Q, *, base: Optional[RetrievalSpec] = None,
              anchors: Sequence[RetrievalSpec] = (),
              k: int = 10, rungs: int = 3, keep: float = 0.4,
              min_rung_n: int = 256, min_rung_q: int = 16,
+             dist=None, natural=None,
              seed: int = 0, verbose: bool = True) -> TuneResult:
     """Successive-halving Pareto-frontier search over ``base.grid(**axes)``.
 
@@ -317,6 +320,10 @@ def autotune(X, Q, *, base: Optional[RetrievalSpec] = None,
         rungs: subsample rungs (the last always runs at full size).
         keep: survivor fraction cap per rung (successive halving).
         min_rung_n / min_rung_q: floors for the subsample schedule.
+        dist: optional explicit base distance (e.g. a ``ViewedDistance``
+            the registry cannot name, or a learned-embedding workload's
+            negdot); defaults to ``base.base_distance()``.
+        natural: forwarded to ``ANNIndex.build`` for ``natural`` policies.
         seed: PRNG seed; fixed seed => identical promotion history,
             frontier and choice.
 
@@ -335,7 +342,7 @@ def autotune(X, Q, *, base: Optional[RetrievalSpec] = None,
 
     # resolve data-calibrated parameters ONCE against the full database so
     # every evaluated spec is concrete and the artifact reproducible
-    dist = base.base_distance()
+    dist = dist if dist is not None else base.base_distance()
     tau_cal = None
 
     def _resolve(spec: RetrievalSpec) -> RetrievalSpec:
@@ -371,7 +378,8 @@ def autotune(X, Q, *, base: Optional[RetrievalSpec] = None,
         X_r = X[perm[:n_r]] if not final else X
         Q_r = Q[:q_r] if not final else Q
         cands = _evaluate_rung(survivors, X_r, Q_r, k, _fold(key, "rung", r),
-                               verbose, f"rung{r} n={X_r.shape[0]}")
+                               verbose, f"rung{r} n={X_r.shape[0]}",
+                               dist=dist, natural=natural)
         record = {"n": int(X_r.shape[0]), "n_queries": int(Q_r.shape[0]),
                   "evaluated": [c.fingerprint for c in cands]}
         if not final:

@@ -22,21 +22,42 @@ from .distances import l2_squared
 from .symmetrize import ViewedDistance
 
 
-def learn_mahalanobis(X, dist, key, *, rank: int = 32, steps: int = 200,
-                      n_anchors: int = 512, k_pos: int = 10, lr: float = 0.05,
-                      margin: float = 1.0):
-    """Learn a low-rank map L: (m, rank) by margin ranking on true-NN pairs.
+def true_neighbor_ids(dist, X, anchor_ids, k_pos: int, *, chunk: int = 4096):
+    """True k-NN ids of ``X[anchor_ids]`` under ``dist``, self excluded BY ID.
 
-    Returns a PairDistance: L2 over the mapped representations.
+    The old positional drop (``pos_ids[:, 1:]``) assumed self is always
+    rank-0, which is false for non-metric distances: negdot gives
+    ``d(u, u) = -||u||^2`` while ``d(u, 2u) = -2||u||^2`` ranks strictly
+    closer, so the positional drop silently discarded a TRUE neighbor and
+    kept the anchor itself as a positive.  Here self-matches are masked by
+    id equality: a stable argsort on the boolean mask moves every non-self
+    id to the front in rank order, then the first ``k_pos`` are taken.
+    """
+    anchor_ids = jnp.asarray(anchor_ids)
+    _, ids = knn_scan(dist, X[anchor_ids], X, k_pos + 1, chunk=chunk)
+    is_self = ids == anchor_ids[:, None]
+    order = jnp.argsort(is_self, axis=1, stable=True)  # False (non-self) first
+    return jnp.take_along_axis(ids, order, axis=1)[:, :k_pos]
+
+
+def fit_mahalanobis_map(X, dist, key, *, rank: int = 32, steps: int = 200,
+                        n_anchors: int = 512, k_pos: int = 10, lr: float = 0.05,
+                        margin: float = 1.0):
+    """Fit the low-rank map L: (m, rank) by margin ranking on true-NN pairs.
+
+    Positives are true k-NN under the ORIGINAL (possibly non-metric,
+    left-query) distance; the loss pushes each anchor closer (in L-space
+    squared L2) to a sampled positive than to a random negative by
+    ``margin``.  Returns the raw map so callers can reuse it beyond the
+    plain proxy distance (``repro.core.learned`` embeds it as a correction
+    TERM of a learned construction distance).
     """
     n, m = X.shape
     rank = min(rank, m)
     k1, k2, k3 = jax.random.split(key, 3)
     anchors = jax.random.choice(k1, n, (min(n_anchors, n),), replace=False)
     Xa = X[anchors]
-    # positives: true k-NN under the original (left-query) distance
-    _, pos_ids = knn_scan(dist, Xa, X, k_pos + 1, chunk=4096)
-    pos_ids = pos_ids[:, 1:]  # drop self if present
+    pos_ids = true_neighbor_ids(dist, X, anchors, k_pos)
 
     L0 = jax.random.normal(k2, (m, rank)) / jnp.sqrt(m)
 
@@ -63,7 +84,19 @@ def learn_mahalanobis(X, dist, key, *, rank: int = 32, steps: int = 200,
     for i in range(steps):
         L = step(L, jax.random.fold_in(k3, i))
 
-    Lc = jax.lax.stop_gradient(L)
+    return jax.lax.stop_gradient(L)
+
+
+def learn_mahalanobis(X, dist, key, *, rank: int = 32, steps: int = 200,
+                      n_anchors: int = 512, k_pos: int = 10, lr: float = 0.05,
+                      margin: float = 1.0):
+    """Learn a low-rank map L: (m, rank) by margin ranking on true-NN pairs.
+
+    Returns a PairDistance: L2 over the mapped representations.
+    """
+    Lc = fit_mahalanobis_map(X, dist, key, rank=rank, steps=steps,
+                             n_anchors=n_anchors, k_pos=k_pos, lr=lr,
+                             margin=margin)
     view = lambda M: M @ Lc
     return ViewedDistance(l2_squared(), left_view=view, right_view=view,
                           view_name="mahalanobis")

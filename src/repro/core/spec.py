@@ -48,9 +48,10 @@ from .symmetrize import SYM_MODES, CombinedDistance, reverse_of, symmetrized
 # DistancePolicy
 # ---------------------------------------------------------------------------
 
-POLICY_KINDS = SYM_MODES + ("max", "blend", "rankblend")
+POLICY_KINDS = SYM_MODES + ("max", "blend", "rankblend", "learned")
 
 _POLICY_RE = re.compile(r"^([a-z0-9_]+)(?:\(([^)]*)\))?$")
+_LEARNED_REF_RE = re.compile(r"^[0-9a-f]{12}$")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,10 +66,21 @@ class DistancePolicy:
     kind: str
     alpha: Optional[float] = None  # blend / rankblend mix weight
     tau: Optional[float] = None  # rankblend proxy scale; None = data-calibrated
+    ref: Optional[str] = None  # learned-weights fingerprint (kind == "learned")
 
     def __post_init__(self):
         if self.kind not in POLICY_KINDS:
             raise ValueError(f"unknown policy kind {self.kind!r}; known: {POLICY_KINDS}")
+        if self.kind == "learned":
+            if self.ref is None or not _LEARNED_REF_RE.match(self.ref):
+                raise ValueError(
+                    f"learned needs a 12-hex weights fingerprint ref, got {self.ref!r}"
+                )
+            if self.alpha is not None or self.tau is not None:
+                raise ValueError("learned takes only a weights ref")
+            return
+        if self.ref is not None:
+            raise ValueError(f"policy {self.kind!r} takes no weights ref")
         if self.kind in ("blend", "rankblend"):
             if self.alpha is None or not 0.0 <= self.alpha <= 1.0:
                 raise ValueError(f"{self.kind} needs alpha in [0, 1], got {self.alpha}")
@@ -95,6 +107,8 @@ class DistancePolicy:
             if self.tau is None:  # data-calibrated at bind/resolve time
                 return f"rankblend({self.alpha!r})"
             return f"rankblend({self.alpha!r},{self.tau!r})"
+        if self.kind == "learned":
+            return f"learned({self.ref})"
         return self.kind
 
     # -- serialization -------------------------------------------------------
@@ -112,6 +126,11 @@ class DistancePolicy:
         if not m:
             raise ValueError(f"malformed policy {spec!r}")
         kind, args = m.group(1), m.group(2)
+        if kind == "learned":
+            # the argument is a weights fingerprint, not a float
+            if not args or not args.strip():
+                raise ValueError(f"learned policy needs a weights ref: {spec!r}")
+            return cls("learned", ref=args.strip())
         params = [float(a) for a in args.split(",") if a.strip()] if args else []
         if len(params) > 2:
             raise ValueError(f"too many parameters in policy {spec!r}")
@@ -155,6 +174,12 @@ class DistancePolicy:
         """
         if self.kind in SYM_MODES:
             return symmetrized(base, self.kind, natural=natural)
+        if self.kind == "learned":
+            from .symmetrize import LearnedDistance, get_learned_weights
+
+            return LearnedDistance.from_weights(
+                base, get_learned_weights(self.ref), fingerprint=self.ref
+            )
         if self.kind == "max":
             return CombinedDistance(base, "max")
         if self.kind == "blend":
@@ -191,6 +216,25 @@ def RankBlend(alpha: float, tau: Optional[float] = 1.0) -> DistancePolicy:  # no
     """
     return DistancePolicy("rankblend", alpha=float(alpha),
                           tau=None if tau is None else float(tau))
+
+
+def Learned(weights_or_ref) -> DistancePolicy:  # noqa: N802
+    """The learned construction distance (ISSUE 9), referenced by content.
+
+    Accepts EITHER a learned-weights dict (``repro.core.learned`` output —
+    registered on the spot, the policy records its content fingerprint) or
+    a bare 12-hex fingerprint whose weights are already registered (e.g.
+    by ``load_learned_artifact``).  ``bind`` resolves the fingerprint
+    through the process-local registry and lowers to
+    ``symmetrize.LearnedDistance``.
+    """
+    from .symmetrize import register_learned_weights
+
+    if isinstance(weights_or_ref, dict):
+        ref = register_learned_weights(weights_or_ref)
+    else:
+        ref = str(weights_or_ref)
+    return DistancePolicy("learned", ref=ref)
 
 
 NONE_POLICY = DistancePolicy("none")
@@ -480,13 +524,110 @@ def load_tuned_artifact(src) -> tuple["RetrievalSpec", dict]:
     return spec, doc
 
 
-def load_spec(src) -> "RetrievalSpec":
-    """Load a ``RetrievalSpec`` from EITHER serialized form.
+# ---------------------------------------------------------------------------
+# learned-weights artifact: repro.core.learned's output, consumable by serve
+# ---------------------------------------------------------------------------
 
-    Accepts a path or JSON string holding a plain spec (``to_json`` output)
-    or a tuned-spec artifact (``tuned_artifact`` output, fingerprint
-    verified) — the single entry point ``launch/serve.py --spec`` uses, so
-    the tuner's output file is directly servable.
+LEARNED_ARTIFACT_KIND = "repro.learned/construction-distance@1"
+
+
+def learned_artifact(spec: "RetrievalSpec", weights: dict, objectives: dict, *,
+                     anchor: Optional[dict] = None, candidates=(),
+                     calibration: Optional[dict] = None,
+                     provenance: Optional[dict] = None) -> dict:
+    """Assemble the learned-construction-distance artifact.
+
+    Seals the learned weights AND the spec that references them: the
+    spec's ``build_policy`` must be ``learned(<fp>)`` where ``<fp>`` is
+    the weights' content fingerprint, so the spec fingerprint transitively
+    covers the weights.  ``candidates`` (NOT named "frontier": serve.py
+    treats any doc with a "frontier" key as a demotion-ladder source) is
+    the measured candidate family the selection was made from.
+    """
+    from .symmetrize import learned_weights_fingerprint
+
+    wfp = learned_weights_fingerprint(weights)
+    if spec.build_policy.kind != "learned" or spec.build_policy.ref != wfp:
+        raise ValueError(
+            f"spec build_policy {spec.build_policy} does not reference the "
+            f"sealed weights (fingerprint {wfp})"
+        )
+    return {
+        "kind": LEARNED_ARTIFACT_KIND,
+        "spec": spec.to_dict(),
+        "spec_fingerprint": spec.fingerprint(),
+        "weights": dict(weights),
+        "weights_fingerprint": wfp,
+        "objectives": dict(objectives),
+        "anchor": dict(anchor or {}),
+        "candidates": [dict(c) for c in candidates],
+        "calibration": dict(calibration or {}),
+        "provenance": {"tool": "repro.core.learned", **(provenance or {})},
+    }
+
+
+def load_learned_artifact(src) -> tuple["RetrievalSpec", dict]:
+    """Load + verify a learned-weights artifact; registers the weights.
+
+    Returns ``(spec, artifact_dict)``.  Three seals are checked: the
+    recorded ``weights_fingerprint`` must equal the recomputed content
+    fingerprint of the embedded weights, the spec's ``build_policy`` ref
+    must point at exactly those weights, and the recorded
+    ``spec_fingerprint`` must match the embedded spec.  On success the
+    weights are registered in the process-local registry, so the returned
+    spec binds (``ANNIndex.build(spec=...)``) with no further setup.
+    """
+    from .symmetrize import learned_weights_fingerprint, register_learned_weights
+
+    if isinstance(src, dict):
+        doc = src
+    else:
+        if "{" not in src:
+            with open(src) as f:
+                src = f.read()
+        doc = json.loads(src)
+    kind = doc.get("kind")
+    if kind != LEARNED_ARTIFACT_KIND:
+        raise ValueError(
+            f"not a learned-weights artifact (kind={kind!r}; "
+            f"expected {LEARNED_ARTIFACT_KIND!r})"
+        )
+    weights = doc.get("weights")
+    if not isinstance(weights, dict):
+        raise ValueError("learned artifact carries no weights dict")
+    wfp = learned_weights_fingerprint(weights)
+    if wfp != doc.get("weights_fingerprint"):
+        raise ValueError(
+            f"learned weights fingerprint mismatch: artifact says "
+            f"{doc.get('weights_fingerprint')!r} but the embedded weights "
+            f"hash to {wfp!r} — the artifact was edited after training"
+        )
+    spec = RetrievalSpec.from_dict(doc["spec"])
+    if spec.build_policy.kind != "learned" or spec.build_policy.ref != wfp:
+        raise ValueError(
+            f"learned artifact spec build_policy {spec.build_policy} does "
+            f"not reference the sealed weights ({wfp})"
+        )
+    if spec.fingerprint() != doc.get("spec_fingerprint"):
+        raise ValueError(
+            f"learned-spec fingerprint mismatch: artifact says "
+            f"{doc.get('spec_fingerprint')!r} but the embedded spec hashes "
+            f"to {spec.fingerprint()!r} — re-run the trainer instead of "
+            f"hand-editing the artifact"
+        )
+    register_learned_weights(weights, fingerprint=wfp)
+    return spec, doc
+
+
+def load_spec(src) -> "RetrievalSpec":
+    """Load a ``RetrievalSpec`` from ANY serialized form.
+
+    Accepts a path or JSON string holding a plain spec (``to_json``
+    output), a tuned-spec artifact (``tuned_artifact`` output, fingerprint
+    verified) or a learned-weights artifact (``learned_artifact`` output,
+    weights + spec fingerprints verified and the weights registered) — the
+    single entry point ``launch/serve.py --spec`` uses, so both tuner and
+    trainer output files are directly servable.
     """
     if not isinstance(src, dict):
         if "{" not in src:
@@ -495,6 +636,8 @@ def load_spec(src) -> "RetrievalSpec":
         src = json.loads(src)
     if src.get("kind") == TUNED_ARTIFACT_KIND:
         return load_tuned_artifact(src)[0]
+    if src.get("kind") == LEARNED_ARTIFACT_KIND:
+        return load_learned_artifact(src)[0]
     return RetrievalSpec.from_dict(src)
 
 

@@ -26,6 +26,8 @@ so graph builders and searchers are agnostic to the symmetrization mode.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Callable, Optional
 
 import jax
@@ -294,6 +296,189 @@ class CombinedDistance:
             self.base.score(rows["f"], qc["f"]),
             self._rev.score(rows["r"], qc["r"]),
         )
+
+
+# ---------------------------------------------------------------------------
+# learned construction distances (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+# process-local registry of learned-weight dicts, keyed by content
+# fingerprint.  ``Learned(ref)`` policies resolve their weights here at
+# bind time; ``load_learned_artifact`` populates it when a sealed artifact
+# is loaded, so a spec shipped inside an artifact is self-contained.
+_LEARNED_WEIGHTS: dict = {}
+
+
+def learned_weights_fingerprint(weights: dict) -> str:
+    """Content fingerprint of a learned-weights dict (sorted-key JSON,
+    sha256, first 12 hex chars) — same convention as spec fingerprints."""
+    blob = json.dumps(weights, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def register_learned_weights(weights: dict, *, fingerprint: Optional[str] = None) -> str:
+    """Register a learned-weights dict; returns its fingerprint.
+
+    ``weights`` must be plain JSON data: ``alpha`` (float), ``beta``
+    (float), ``tau`` (float or None) and ``L`` (nested lists, the low-rank
+    Mahalanobis map, or None).  When ``fingerprint`` is given it is checked
+    against the recomputed content fingerprint — a mismatch means the
+    weights were tampered with after sealing.
+    """
+    for field in ("alpha", "beta", "tau", "L"):
+        if field not in weights:
+            raise ValueError(f"learned weights missing field {field!r}")
+    fp = learned_weights_fingerprint(weights)
+    if fingerprint is not None and fingerprint != fp:
+        raise ValueError(
+            f"learned weights fingerprint mismatch: recorded {fingerprint}, "
+            f"recomputed {fp}"
+        )
+    _LEARNED_WEIGHTS[fp] = weights
+    return fp
+
+
+def get_learned_weights(ref: str) -> dict:
+    """Look up a registered learned-weights dict by fingerprint."""
+    try:
+        return _LEARNED_WEIGHTS[ref]
+    except KeyError:
+        raise KeyError(
+            f"no learned weights registered under {ref!r}; load the sealed "
+            "artifact first (repro.core.spec.load_learned_artifact / "
+            "load_spec) or call register_learned_weights"
+        ) from None
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnedDistance:
+    """A learned construction distance (ISSUE 9).
+
+    The trained family is a superset of ``CombinedDistance``'s blend:
+
+        d_learned(u, v) = alpha * d(u, v) + (1 - alpha) * proxy(d(v, u))
+                          + beta * ||L^T u - L^T v||^2
+
+    where ``proxy`` is identity when ``tau is None`` and the rankblend
+    compression ``tau * sign(x) * log1p(|x| / tau)`` otherwise, and ``L``
+    is a low-rank Mahalanobis map fit by margin-ranking against true-NN
+    pairs under the ORIGINAL distance (``repro.core.learned``).  Unused
+    branches are gated STATICALLY (``alpha == 1`` skips the reverse
+    branch, ``beta == 0`` skips the Mahalanobis branch), so the
+    degenerate weights ``(alpha=a, beta=0, tau=None)`` are arithmetically
+    identical to ``CombinedDistance(base, "blend", a)`` — the trainer's
+    by-construction anchor guarantee relies on this bit-parity.
+
+    ``L`` lives inside ``maha`` (an internal ``ViewedDistance`` whose view
+    closes over the array), keeping this dataclass hashable as a static
+    jit argument.  Same PairDistance contract as every other wrapper:
+    ``prep_scan`` carries up to three branches as a pytree, so the batched
+    engines and Pallas kernels run it unchanged.
+    """
+
+    base: object  # any PairDistance
+    alpha: float = 1.0
+    beta: float = 0.0
+    tau: Optional[float] = None
+    maha: Optional[object] = None  # ViewedDistance(l2, M -> M @ L); None iff beta == 0
+    weights_fingerprint: str = ""
+
+    def __post_init__(self):
+        if not 0.0 <= self.alpha <= 1.0:
+            raise ValueError(f"alpha must be in [0, 1], got {self.alpha}")
+        if self.tau is not None and self.tau <= 0.0:
+            raise ValueError(f"tau must be > 0, got {self.tau}")
+        if (self.beta != 0.0) != (self.maha is not None):
+            raise ValueError("maha branch must be present exactly when beta != 0")
+
+    @classmethod
+    def from_weights(cls, base, weights: dict, *, fingerprint: Optional[str] = None):
+        """Build from a plain-JSON weights dict (see register_learned_weights)."""
+        fp = register_learned_weights(weights, fingerprint=fingerprint)
+        beta = float(weights["beta"])
+        maha = None
+        if beta != 0.0:
+            if weights["L"] is None:
+                raise ValueError("beta != 0 requires a Mahalanobis map L")
+            L = jnp.asarray(weights["L"], jnp.float32)
+            view = lambda M: M @ L  # noqa: E731 — closure keeps the dataclass hashable
+            maha = ViewedDistance(l2_squared(), left_view=view, right_view=view,
+                                  view_name=f"maha({fp})")
+        tau = weights["tau"]
+        return cls(base, alpha=float(weights["alpha"]), beta=beta,
+                   tau=None if tau is None else float(tau),
+                   maha=maha, weights_fingerprint=fp)
+
+    @property
+    def _rev(self):
+        return reverse_of(self.base)
+
+    @property
+    def name(self):
+        return f"{self.base.name}-learned({self.weights_fingerprint})"
+
+    @property
+    def needs_simplex(self):
+        return self.base.needs_simplex
+
+    @property
+    def symmetric(self):
+        # the Mahalanobis term is symmetric; the blend part is symmetric
+        # only at the avg point with an identity proxy
+        blend_sym = self.alpha == 0.5 and self.tau is None
+        return (blend_sym or self.alpha == 1.0 and getattr(self.base, "symmetric", False))
+
+    def _combine(self, fwd, rev, m):
+        if rev is not None and self.tau is not None:
+            rev = self.tau * jnp.sign(rev) * jnp.log1p(jnp.abs(rev) / self.tau)
+        out = fwd if rev is None else self.alpha * fwd + (1.0 - self.alpha) * rev
+        if m is not None:
+            out = out + self.beta * m
+        return out
+
+    def matrix(self, U, V):
+        rev = self.base.matrix(V, U).T if self.alpha != 1.0 else None
+        m = self.maha.matrix(U, V) if self.beta != 0.0 else None
+        return self._combine(self.base.matrix(U, V), rev, m)
+
+    def query_matrix(self, Q, X, mode: str = "left"):
+        fwd = self.base.query_matrix(Q, X, mode=mode)
+        rev = None
+        if self.alpha != 1.0:
+            rev = self.base.query_matrix(Q, X, mode="right" if mode == "left" else "left")
+        # the Mahalanobis term is symmetric, so its mode is irrelevant
+        m = self.maha.query_matrix(Q, X, mode=mode) if self.beta != 0.0 else None
+        return self._combine(fwd, rev, m)
+
+    def pairwise(self, u, v):
+        rev = self.base.pairwise(v, u) if self.alpha != 1.0 else None
+        m = self.maha.pairwise(u, v) if self.beta != 0.0 else None
+        return self._combine(self.base.pairwise(u, v), rev, m)
+
+    def pairwise_batch(self, U, V):
+        return jax.vmap(self.pairwise)(U, V)
+
+    def prep_scan(self, X):
+        out = {"f": self.base.prep_scan(X)}
+        if self.alpha != 1.0:
+            out["r"] = self._rev.prep_scan(X)
+        if self.beta != 0.0:
+            out["m"] = self.maha.prep_scan(X)
+        return out
+
+    def prep_query(self, q):
+        out = {"f": self.base.prep_query(q)}
+        if self.alpha != 1.0:
+            out["r"] = self._rev.prep_query(q)
+        if self.beta != 0.0:
+            out["m"] = self.maha.prep_query(q)
+        return out
+
+    def score(self, rows, qc):
+        fwd = self.base.score(rows["f"], qc["f"])
+        rev = self._rev.score(rows["r"], qc["r"]) if self.alpha != 1.0 else None
+        m = self.maha.score(rows["m"], qc["m"]) if self.beta != 0.0 else None
+        return self._combine(fwd, rev, m)
 
 
 # ---------------------------------------------------------------------------

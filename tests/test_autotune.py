@@ -218,3 +218,26 @@ def test_autotune_artifact_round_trips_into_a_build(tuned, tmp_path, workload):
 def test_autotune_pick_budget_too_tight_raises(tuned):
     with pytest.raises(ValueError, match="budget"):
         tuned.pick(max_evals=1.0)
+
+
+def test_learned_policy_as_grid_axis(workload):
+    """ISSUE 9: a ``Learned`` policy rides the tuner grid next to the hand
+    combinators — same Pareto frontier, anchor re-promotion intact — and
+    the new ``dist=`` threading lets the tuner run explicit distances."""
+    from repro.core import Learned, mahalanobis_weights
+    from repro.core.distances import get_distance
+
+    db, Q = workload
+    L = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (DIM, 4)),
+                   np.float32)
+    learned = Learned(mahalanobis_weights(L, 0.75, 0.1))
+    axes = dict(build_policy=[Blend(0.75), learned], ef_search=[16])
+    hand = BASE.replace(build_policy=Blend(0.75), ef_search=16)
+    res = autotune(db, Q, base=BASE, axes=axes, anchors=[hand], k=K,
+                   rungs=2, seed=0, dist=get_distance("kl"), verbose=False)
+    kinds = {c.spec.build_policy.kind for c in res.candidates}
+    assert kinds == {"blend", "learned"}  # both reached the final rung
+    hand_cand = res.lookup(hand)
+    choice = res.pick(max_evals=hand_cand.objectives["evals_per_query"])
+    assert not dominates(hand_cand.objectives, choice.objectives,
+                         maximize=MAXIMIZE, minimize=MINIMIZE)

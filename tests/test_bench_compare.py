@@ -254,6 +254,56 @@ def test_autotune_schema_gates_tuned_recall_and_eval_headroom():
     assert not failures
 
 
+def _learned_doc():
+    return {
+        "workload": {"k": 10, "hand": "blend(0.75)/ef=32"},
+        "two_tower": [
+            {"policy": "hand", "recall@10": 0.8688, "evals_per_query": 347.0},
+            {"policy": "learned", "recall@10": 0.8719, "evals_per_query": 340.0,
+             "eval_headroom": 1.02, "weights_fingerprint": "58d1967c9ff3"},
+        ],
+        "bm25": [
+            {"policy": "hand", "recall@10": 0.8917, "evals_per_query": 500.0},
+            {"policy": "learned", "recall@10": 0.8958, "evals_per_query": 500.0,
+             "eval_headroom": 1.001, "weights_fingerprint": "357f9c0908c7"},
+            {"policy": "natural", "recall@10": 0.9208, "evals_per_query": 471.0},
+        ],
+        "served": {"recall@10": 0.8688, "served": 32},
+    }
+
+
+def test_learned_schema_gates_per_policy_recall_and_headroom():
+    """Each workload's policy rows are recall-gated (hand drift = workload
+    drift; learned drift = the trained distance eroding) and the learned
+    rows' eval_headroom is ratio-gated; the scheduler `served` row is
+    recall-gated too."""
+    fresh = _learned_doc()
+    fresh["bm25"][1]["recall@10"] -= 0.02
+    _, failures, _ = compare(_learned_doc(), fresh, qps_tol=0.2,
+                             recall_tol=0.01)
+    assert [(f["section"], f["metric"]) for f in failures] == [
+        ("bm25", "recall@10")
+    ]
+    fresh = _learned_doc()
+    fresh["two_tower"][1]["eval_headroom"] = 0.7  # learned now costs more
+    _, failures, _ = compare(_learned_doc(), fresh, qps_tol=0.2,
+                             recall_tol=0.01)
+    assert [f["metric"] for f in failures] == ["eval_headroom"]
+    fresh = _learned_doc()
+    fresh["served"]["recall@10"] -= 0.02
+    _, failures, _ = compare(_learned_doc(), fresh, qps_tol=0.2,
+                             recall_tol=0.01)
+    assert [(f["section"], f["metric"]) for f in failures] == [
+        ("served", "recall@10")
+    ]
+    # the widened CI tolerance really does absorb trained-model jitter
+    fresh = _learned_doc()
+    fresh["two_tower"][0]["recall@10"] -= 0.008
+    _, failures, _ = compare(_learned_doc(), fresh, qps_tol=0.2,
+                             recall_tol=0.01)
+    assert not failures
+
+
 def _overload_doc():
     return {
         "overload": [

@@ -243,6 +243,76 @@ def test_rankblend_proxy_is_monotone_in_reverse_distance():
                                       np.argsort(d_rev[b], kind="stable"))
 
 
+# ---------------------------------------------------------------------------
+# learned combinator (ISSUE 9): same conformance battery as the hand ones
+# ---------------------------------------------------------------------------
+
+
+def _learned_policy(dim, *, alpha=0.75, beta=0.5, tau=None, seed=23):
+    """A Learned policy with a random low-rank map matched to ``dim``
+    (unlike the float combinators, the weights are dimension-bound, so the
+    policy cannot join the shared COMBINATORS parameter list)."""
+    from repro.core.learned import mahalanobis_weights
+    from repro.core.spec import Learned
+
+    L = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed), (dim, 4)), np.float32
+    )
+    return Learned(mahalanobis_weights(L, alpha, beta, tau=tau))
+
+
+@pytest.mark.parametrize("tau", [None, 2.0], ids=["identity", "rankproxy"])
+@pytest.mark.parametrize("base", ["kl", "itakura_saito"])
+def test_learned_batched_forms_agree_with_scalar_oracle(base, tau):
+    """The learned combinator exposes the full PairDistance contract —
+    matrix, both query_matrix modes, pairwise_batch and the prep_scan/score
+    gather path reproduce its own scalar pairwise oracle (the three-branch
+    pytree rides the engines like any other policy)."""
+    dist = _learned_policy(12, tau=tau).bind(get_distance(base))
+    U = _data(10, 6, 12)
+    V = _data(11, 5, 12)
+    want = _oracle(dist, U, V)
+    np.testing.assert_allclose(dist.matrix(U, V), want, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(
+        dist.query_matrix(V, U, mode="left"), want.T, rtol=RTOL, atol=ATOL
+    )
+    np.testing.assert_allclose(
+        dist.query_matrix(U, V, mode="right"), want, rtol=RTOL, atol=ATOL
+    )
+    W = _data(12, 6, 12)
+    np.testing.assert_allclose(
+        dist.pairwise_batch(U, W), np.diagonal(_oracle(dist, U, W)),
+        rtol=RTOL, atol=ATOL,
+    )
+    X = _data(13, 9, 10)
+    Q = _data(14, 3, 10)
+    dist10 = _learned_policy(10, tau=tau).bind(get_distance(base))
+    consts = dist10.prep_scan(X)
+    rows_idx = jnp.asarray([0, 3, 3, 8, 5], jnp.int32)
+    want_s = _oracle(dist10, X[rows_idx], Q)
+    for b in range(3):
+        qc = dist10.prep_query(Q[b])
+        rows = jax.tree.map(lambda a: a[rows_idx], consts)
+        np.testing.assert_allclose(
+            np.asarray(dist10.score(rows, qc)), want_s[:, b], rtol=RTOL, atol=ATOL
+        )
+
+
+def test_learned_asymmetry_preserved():
+    """alpha=1 with a symmetric Mahalanobis correction over KL must stay
+    genuinely non-symmetric — the learned term corrects, never coerces."""
+    dist = _learned_policy(24, alpha=1.0, beta=0.5).bind(get_distance("kl"))
+    U = _data(15, 32, 24)
+    V = _data(16, 32, 24)
+    fwd = np.asarray(dist.pairwise_batch(U, V))
+    rev = np.asarray(dist.pairwise_batch(V, U))
+    assert np.max(np.abs(fwd - rev)) > 1e-3, f"{dist.name} looks symmetrized"
+    M = np.asarray(dist.matrix(U, V))
+    Mt = np.asarray(dist.matrix(V, U)).T
+    assert np.max(np.abs(M - Mt)) > 1e-3
+    assert not dist.symmetric
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     d=st.integers(min_value=2, max_value=40),

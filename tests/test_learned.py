@@ -1,0 +1,249 @@
+"""Learned construction distances (ISSUE 9): trainer, policy, artifact seal.
+
+Covers the new learning layer end-to-end at test sizes:
+
+  * the ``true_neighbor_ids`` self-masking bugfix (positional drop was
+    wrong for non-metric distances whose self-distance is not rank-0);
+  * ``Learned`` policy parse/str/validation and registry binding;
+  * bit-parity of the degenerate learned weights with the hand ``Blend``
+    combinator (the trainer's by-construction anchor guarantee);
+  * ``fit_construction_distance`` determinism (two identical runs =>
+    bit-identical weights and artifact fingerprints, PR-6 convention) and
+    the anchor guarantee itself;
+  * the sealed-artifact round trip through ``load_learned_artifact`` /
+    ``load_spec`` / ``serve.py --spec``, including tamper rejection;
+  * the slot scheduler serving a learned spec.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ANNIndex,
+    Blend,
+    Learned,
+    RetrievalSpec,
+    fit_construction_distance,
+    load_learned_artifact,
+    load_spec,
+    mahalanobis_weights,
+    true_neighbor_ids,
+)
+from repro.core.distances import get_distance
+from repro.core.spec import DistancePolicy
+from repro.core.symmetrize import LearnedDistance, learned_weights_fingerprint
+from repro.data.synthetic import lda_like_histograms, split_queries
+
+K = 5
+
+
+def _workload(n=420, n_q=24, dim=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    data = lda_like_histograms(key, n + n_q, dim)
+    Q, X = split_queries(data, n_q, jax.random.fold_in(key, 1))
+    return np.asarray(X), np.asarray(Q)
+
+
+def _base_spec(**kw):
+    kw.setdefault("distance", "kl")
+    kw.setdefault("builder", "swgraph")
+    kw.setdefault("build_engine", "wave")
+    kw.setdefault("wave", 32)
+    kw.setdefault("NN", 8)
+    kw.setdefault("ef_construction", 40)
+    kw.setdefault("k", K)
+    kw.setdefault("ef_search", 16)
+    kw.setdefault("frontier", 1)
+    return RetrievalSpec(**kw)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: self-pair masking in the metric learner
+# ---------------------------------------------------------------------------
+
+
+def test_true_neighbor_ids_masks_self_by_id_not_position():
+    """negdot gives d(u, u) = -||u||^2 but d(u, 2u) = -2||u||^2 — self is
+    NOT rank-0, so the old positional drop (ids[:, 1:]) kept the anchor
+    itself as a positive and discarded a true neighbor.  The id-equality
+    mask must exclude the anchor and keep the doubled row."""
+    dist = get_distance("negdot")
+    rng = np.random.RandomState(0)
+    U = rng.randn(6, 8).astype(np.float32)
+    X = np.concatenate([U, 2.0 * U]).astype(np.float32)  # row i+6 == 2*U[i]
+    anchors = jnp.arange(6)
+    ids = np.asarray(true_neighbor_ids(dist, jnp.asarray(X), anchors, 3))
+    for i in range(6):
+        assert i not in ids[i], f"anchor {i} kept itself as a positive"
+        assert i + 6 in ids[i], f"anchor {i} lost its doubled true neighbor"
+    # regression pin: the positional drop WOULD have kept self here
+    from repro.core.brute_force import knn_scan
+
+    _, raw = knn_scan(dist, jnp.asarray(X[:6]), jnp.asarray(X), 4)
+    assert any(int(raw[i, 0]) != i for i in range(6)), (
+        "workload no longer exercises the bug (self is rank-0 everywhere)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Learned policy: parse / str / validation / binding
+# ---------------------------------------------------------------------------
+
+
+def _weights(dim=16, rank=4, alpha=0.75, beta=0.5, tau=None, seed=3):
+    L = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (dim, rank)),
+                   np.float32)
+    return mahalanobis_weights(L, alpha, beta, tau=tau)
+
+
+def test_learned_policy_roundtrip_and_validation():
+    p = Learned(_weights())
+    assert p.kind == "learned" and len(p.ref) == 12
+    assert DistancePolicy.parse(str(p)) == p
+    # spec round trip carries the ref through to_dict/from_dict
+    spec = _base_spec(build_policy=p)
+    assert RetrievalSpec.from_dict(spec.to_dict()) == spec
+
+    with pytest.raises(ValueError):
+        DistancePolicy("learned")  # no ref
+    with pytest.raises(ValueError):
+        DistancePolicy("blend", alpha=0.5, ref="ab" * 6)  # ref on blend
+    with pytest.raises(ValueError):
+        DistancePolicy.parse("learned()")  # empty ref
+    with pytest.raises(ValueError):
+        DistancePolicy("learned", ref="not-hex-here")  # malformed ref
+
+
+def test_learned_bind_requires_registered_weights():
+    p = DistancePolicy("learned", ref="0123456789ab")
+    with pytest.raises(KeyError, match="no learned weights registered"):
+        p.bind(get_distance("kl"))
+
+
+def test_degenerate_learned_weights_bit_identical_to_blend():
+    """(alpha=0.75, beta=0, tau=None) must evaluate to the SAME floats as
+    Blend(0.75): same arithmetic, same two-branch pytree — this parity is
+    what guarantees the trainer never loses to its hand anchor."""
+    base = get_distance("kl")
+    ld = LearnedDistance.from_weights(base, mahalanobis_weights(None, 0.75, 0.0))
+    bd = Blend(0.75).bind(base)
+    X, Q = _workload(40, 6)
+    np.testing.assert_array_equal(np.asarray(ld.matrix(Q, X)),
+                                  np.asarray(bd.matrix(Q, X)))
+    for mode in ("left", "right"):
+        np.testing.assert_array_equal(
+            np.asarray(ld.query_matrix(Q, X, mode=mode)),
+            np.asarray(bd.query_matrix(Q, X, mode=mode)),
+        )
+    rows_idx = jnp.asarray([0, 7, 7, 31, 5], jnp.int32)
+    rows_l = jax.tree.map(lambda a: a[rows_idx], ld.prep_scan(X))
+    rows_b = jax.tree.map(lambda a: a[rows_idx], bd.prep_scan(X))
+    np.testing.assert_array_equal(
+        np.asarray(ld.score(rows_l, ld.prep_query(Q[0]))),
+        np.asarray(bd.score(rows_b, bd.prep_query(Q[0]))),
+    )
+
+
+# ---------------------------------------------------------------------------
+# trainer: determinism + the anchor guarantee
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_fit():
+    X, Q = _workload()
+    base = _base_spec()
+    kw = dict(base=base, rank=8, steps=20, n_anchors=64, k_pos=5,
+              alphas=(0.75, 1.0), betas=(0.5,), verbose=False)
+    return X, Q, base, kw, fit_construction_distance(X, Q, **kw)
+
+
+def test_fit_beats_or_matches_anchor(tiny_fit):
+    _, _, _, _, res = tiny_fit
+    assert res.objectives["recall"] >= res.anchor["recall"]
+    assert res.objectives["evals_per_query"] <= res.anchor["evals_per_query"]
+    assert res.spec.build_policy.kind == "learned"
+    assert res.spec.build_policy.ref == res.fingerprint
+    # the degenerate clone's row matches the anchor's measurement exactly
+    clone_fp = learned_weights_fingerprint(mahalanobis_weights(None, 0.75, 0.0))
+    clones = [c for c in res.candidates if c["weights_fingerprint"] == clone_fp]
+    assert len(clones) == 1
+    assert clones[0]["recall"] == res.anchor["recall"]
+    assert clones[0]["evals_per_query"] == res.anchor["evals_per_query"]
+
+
+def test_fit_is_deterministic(tiny_fit):
+    X, Q, _, kw, res1 = tiny_fit
+    res2 = fit_construction_distance(X, Q, **kw)
+    assert res1.fingerprint == res2.fingerprint
+    assert res1.weights == res2.weights
+    assert res1.spec.fingerprint() == res2.spec.fingerprint()
+    assert json.dumps(res1.artifact(), sort_keys=True) == \
+        json.dumps(res2.artifact(), sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# sealed artifact: round trip + tamper rejection + serving
+# ---------------------------------------------------------------------------
+
+
+def test_artifact_roundtrip_and_tamper_rejection(tiny_fit, tmp_path):
+    X, Q, _, _, res = tiny_fit
+    path = tmp_path / "LEARNED_weights.json"
+    art = res.save(str(path))
+    assert "frontier" not in art  # serve.py treats that key as a ladder source
+
+    spec, doc = load_learned_artifact(str(path))
+    assert spec == res.spec
+    assert doc["weights_fingerprint"] == res.fingerprint
+    assert load_spec(str(path)) == res.spec
+
+    # the loaded spec is immediately buildable (weights were registered)
+    idx = ANNIndex.build(X, spec=spec, key=jax.random.PRNGKey(2))
+    _, ids, _, _ = idx.searcher(spec=spec)(Q)
+    assert ids.shape == (Q.shape[0], K)
+
+    tampered = dict(art)
+    tampered["weights"] = dict(art["weights"], alpha=0.9)
+    with pytest.raises(ValueError, match="weights fingerprint mismatch"):
+        load_learned_artifact(tampered)
+
+    tampered = dict(art, spec=dict(art["spec"], ef_search=999))
+    with pytest.raises(ValueError):
+        load_learned_artifact(tampered)
+
+
+def test_serve_cli_consumes_learned_artifact(tmp_path):
+    """`serve.py --spec LEARNED_weights.json` must build and serve the
+    learned scenario with no further setup (fingerprints verified, weights
+    registered by the loader)."""
+    from repro.core.spec import learned_artifact
+    from repro.launch.serve import main
+
+    w = _weights(dim=16, beta=0.25)
+    spec = _base_spec(build_policy=Learned(w), ef_search=48, NN=10,
+                      ef_construction=48, k=10, frontier=2)
+    art = learned_artifact(spec, w, {"recall": 1.0})
+    path = tmp_path / "LEARNED_weights.json"
+    path.write_text(json.dumps(art))
+    stats = main(["--spec", str(path), "--n-db", "320", "--dim", "16",
+                  "--queries", "32", "--batch", "16"])
+    assert stats["served"] == 32
+    assert RetrievalSpec.from_dict(stats["spec"]) == spec
+
+
+def test_scheduler_serves_learned_spec(tiny_fit):
+    X, Q, _, _, res = tiny_fit
+    spec = res.spec
+    idx = ANNIndex.build(X, spec=spec, key=jax.random.PRNGKey(5))
+    _, ids, _, _ = idx.searcher(spec=spec)(Q)
+    # pin the slot engine to the searcher's frontier (the scheduler default
+    # is the fatter spec.sched_frontier) so retire results are bit-identical
+    out = idx.scheduler(spec=spec, frontier=spec.frontier).run_stream(Q)
+    assert [r.rid for r in out] == list(range(Q.shape[0]))
+    got = np.stack([r.ids for r in sorted(out, key=lambda r: r.rid)])
+    np.testing.assert_array_equal(got, np.asarray(ids))

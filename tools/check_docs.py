@@ -48,6 +48,7 @@ SKIP_SCHEMES = ("http://", "https://", "mailto:")
 KNOWN_ARTIFACTS = frozenset({
     "BENCH_autotune",
     "BENCH_beam_engine",
+    "BENCH_learned",
     "BENCH_build_engine",
     "BENCH_online",
     "BENCH_overload",
