@@ -76,7 +76,8 @@ def _measure(out_path: str, quick: bool):
     import jax
     import numpy as np
 
-    from repro.core import ANNIndex, knn_scan, recall_at_k
+    from repro.core import (ANNIndex, dispatch_cache_size, knn_scan,
+                            recall_at_k, recompile_guard)
     from repro.core.distributed import (ShardedSlotScheduler,
                                         build_local_subgraphs)
     from repro.core.metrics import speedup_model
@@ -111,12 +112,10 @@ def _measure(out_path: str, quick: bool):
     sched = ShardedSlotScheduler(mesh, dist, X, neighbors=nbrs, slots=SLOTS,
                                  ef=EF_S, k=K, frontier=FRONTIER,
                                  steps_per_sync=STEPS_PER_SYNC)
-    s_ids, s_lat, s_wall, s_evals = serve(sched)
-    step_ex = sched._step._cache_size()
-    admit_ex = sched._admit._cache_size()
-    assert step_ex == 1 and admit_ex == 1, (
-        f"steady-state recompile: step={step_ex} admit={admit_ex} "
-        f"executables (want 1 each)")
+    # zero-recompile contract: one executable per jitted path across three
+    # full streams (raises RecompileError on violation)
+    with recompile_guard(sched._step, sched._admit):
+        s_ids, s_lat, s_wall, s_evals = serve(sched)
 
     # --- single_shard: one shard's rows, one device (the latency anchor)
     idx_1 = ANNIndex.build(X[:n_local], dist, builder="nndescent", NN=NN,
@@ -169,8 +168,8 @@ def _measure(out_path: str, quick: bool):
         "eval_reduction": round(speedup_model(n, s_evals), 1),
         "p99_ratio_vs_single": round(ratio, 3),
         "p99_headroom": round(P99_BOUND / ratio, 3),
-        "step_executables": step_ex,
-        "admit_executables": admit_ex,
+        "step_executables": dispatch_cache_size(sched._step),
+        "admit_executables": dispatch_cache_size(sched._admit),
         **latency_stats(s_lat, "tick_"),
         **latency_stats(s_wall, "wall_"),
     }

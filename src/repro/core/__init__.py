@@ -69,3 +69,10 @@ from .autotune import Candidate, TuneResult, autotune, build_cost_proxy, default
 from .metric_learning import fit_mahalanobis_map, learn_mahalanobis, true_neighbor_ids
 from .learned import LearnedResult, fit_construction_distance, mahalanobis_weights
 from .metrics import recall_at_k, speedup_model
+from .runtime_checks import (
+    RecompileError,
+    dispatch_cache_size,
+    enable_strict_mode,
+    recompile_guard,
+    strict_mode_requested,
+)

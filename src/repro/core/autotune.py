@@ -280,10 +280,12 @@ def _evaluate_rung(specs: Sequence[RetrievalSpec], X, Q, k: int, key,
             builds[bk] = idx
         search = idx.searcher(spec=spec)
         _, ids, n_evals, _ = search(Q)
-        jax.block_until_ready(ids)
+        # one sync per candidate spec by design: successive halving scores
+        # each configuration on host before pruning the rung
+        jax.block_until_ready(ids)  # jaxlint: disable=JL003 (per-candidate)
         obj = {
-            "recall": round(recall_at_k(np.asarray(ids), true_np), 4),
-            "evals_per_query": round(float(np.mean(np.asarray(n_evals))), 1),
+            "recall": round(recall_at_k(np.asarray(ids), true_np), 4),  # jaxlint: disable=JL003 (per-candidate)
+            "evals_per_query": round(float(np.mean(np.asarray(n_evals))), 1),  # jaxlint: disable=JL003 (per-candidate)
             "build_cost": build_cost_proxy(spec, n),
         }
         out.append(Candidate(spec, obj))

@@ -72,7 +72,10 @@ def select_entries(dist, X, n_entries: int = 4, key=None, sample: int = 256):
     if n_entries == 1:
         return medoid[None]
     rand = jax.random.choice(k_rand, n, (min(4 * n_entries, n),), replace=False)
-    rand = rand[rand != medoid][: n_entries - 1].astype(jnp.int32)
+    # fixed-shape medoid exclusion: a stable argsort keys the (at most one)
+    # medoid hit to the tail, so the head slice is the same elements in the
+    # same order as the old boolean mask — without the data-dependent shape
+    rand = rand[jnp.argsort(rand == medoid)][: n_entries - 1].astype(jnp.int32)
     return jnp.concatenate([medoid[None], rand])
 
 

@@ -45,7 +45,7 @@ def knn_scan(dist, Q, X, k: int, chunk: int = 8192, mode: str = "left"):
         best_d, best_i = carry
         xblk, base = inputs
         d = dist.query_matrix(Q, xblk, mode=mode).astype(jnp.float32)
-        ids = base + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        ids = base[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]
         valid = ids < n
         d = jnp.where(valid, d, jnp.inf)
         return _merge_topk(best_d, best_i, d, jnp.broadcast_to(ids, d.shape), k), None

@@ -346,9 +346,13 @@ class ShardedSlotScheduler(SchedulerHost):
         self.C = frontier_compact_width(self.T, M, compact)
         self.max_steps = int(self.n_local if max_steps is None else max_steps)
         self.steps_per_sync = int(max(1, steps_per_sync))
-        self._neighbors = jax.device_put(
+        # one-time constant placement: every jitted call sees the SAME array
+        # object, so this cannot split the dispatch cache (cf. init(), where
+        # per-call host-built state did exactly that)
+        nbrs_dev = jax.device_put(  # jaxlint: disable=JL001 (placed once)
             jnp.asarray(neighbors, jnp.int32),
             NamedSharding(mesh, P(self.db_axes, None)))
+        self._neighbors = nbrs_dev
         # per-shard scan constants, computed ONCE (leading row axis sharded)
         consts_shape = jax.eval_shape(
             dist.prep_scan,

@@ -378,16 +378,21 @@ class OnlineIndex:
         W = min(self.wave, k)
         T = max(1, min(self.frontier, self.ef_construction))
         L = min(self.NN, W - 1)
+        # one host read up front: in steady state (some entry alive, which
+        # inserts never undo) the wave loop runs with ZERO per-wave device
+        # syncs; only the delete-all recovery path re-checks after adopting
+        entries_ok = self._entries_alive()
         for lo in range(0, k, W):
             chunk = ids[lo:lo + W]
             pids = np.full((W,), self.capacity, np.int32)
             pids[: len(chunk)] = chunk
             ok_pt = pids < self.capacity
-            if not bool(np.asarray(self.alive[self.entries]).any()):
+            if not entries_ok:
                 # every entry is tombstoned (e.g. after delete-all): adopt
                 # whatever is alive — n_total already covers the preceding
                 # waves, so later waves can reach earlier ones
                 self._refresh_entries()
+                entries_ok = self._entries_alive()
             self.adj, self.adj_d, self.alive = _insert_wave(
                 self.build_dist, self.adj, self.adj_d, self.consts, self.qc_all,
                 self.alive, self.entries, jnp.asarray(pids), jnp.asarray(ok_pt),
@@ -561,6 +566,11 @@ class OnlineIndex:
         return self.searcher(k, ef_search, frontier)(Q)
 
     # ------------------------------------------------------------ internals
+
+    def _entries_alive(self) -> bool:
+        """At least one entry point is alive (ONE host sync — callers hoist
+        this out of wave loops; see insert())."""
+        return bool(np.asarray(self.alive[self.entries]).any())
 
     def _refresh_entries(self):
         """Keep entry points alive: dead entries are replaced by random live

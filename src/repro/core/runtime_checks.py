@@ -1,0 +1,116 @@
+"""Runtime sanitizers for the jit contracts: recompile guard + strict mode.
+
+Two layers, both born from shipped bugs (see ``docs/static-analysis.md``
+for the static half, ``tools/jaxlint``):
+
+* :func:`recompile_guard` — context manager asserting that a set of jitted
+  callables does not grow their dispatch caches past a cap.  Generalizes
+  PR 9's hand-rolled ``_cache_size() == 1`` asserts: the sharded scheduler
+  once split the C++ fastpath cache on sharding-object *identity* (a
+  host-built reset state hashes differently from jit output even at
+  identical placement), which ``jax_explain_cache_misses`` never surfaced.
+  Scheduler / sharded / online tests all state the zero-recompile contract
+  through this one helper.
+
+* :func:`enable_strict_mode` — opt-in jax debug config for test runs,
+  wired through the ``REPRO_STRICT=1`` env switch by ``tests/conftest.py``:
+  ``jax_numpy_rank_promotion="raise"`` (silent broadcast bugs),
+  ``jax_transfer_guard`` (default ``"log"`` — the serving retire path
+  legitimately reads device results back to host, so ``"disallow"`` is a
+  per-run escalation via ``REPRO_STRICT_TRANSFER``), tracer-leak checking,
+  and ``jax_debug_nans`` behind ``REPRO_STRICT_NANS=1`` (off by default:
+  the engines carry ``inf`` fill values whose masked-lane arithmetic can
+  produce transient NaNs by design).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Iterator, Mapping
+
+import jax
+
+STRICT_ENV = "REPRO_STRICT"
+STRICT_NANS_ENV = "REPRO_STRICT_NANS"
+STRICT_TRANSFER_ENV = "REPRO_STRICT_TRANSFER"
+
+
+class RecompileError(AssertionError):
+    """A jitted path compiled more executables than its contract allows."""
+
+
+def dispatch_cache_size(fn) -> int:
+    """Number of compiled executables in ``fn``'s jit dispatch cache."""
+    try:
+        return int(fn._cache_size())
+    except AttributeError:
+        raise TypeError(
+            f"{fn!r} has no _cache_size(); pass the jax.jit-wrapped callable"
+        ) from None
+
+
+def _fn_name(fn) -> str:
+    return getattr(fn, "__name__", None) or repr(fn)
+
+
+@contextlib.contextmanager
+def recompile_guard(*jitted_fns, max_executables: int = 1) -> Iterator[None]:
+    """Assert each jitted fn ends the block with <= ``max_executables``.
+
+    Usage (the zero-recompile serving contract)::
+
+        with recompile_guard(sched._step, sched._admit):
+            sched.run_stream(queries)
+            sched.run_stream(more_queries)
+
+    Raises :class:`RecompileError` naming every offending callable with its
+    entry/exit cache sizes.  ``max_executables`` raises the cap for paths
+    that legitimately compile one executable per shape bucket (e.g. a
+    demotion ladder compiles one per rung).
+    """
+    if not jitted_fns:
+        raise TypeError("recompile_guard needs at least one jitted callable")
+    entry = [dispatch_cache_size(f) for f in jitted_fns]
+    yield
+    offenders = []
+    for fn, before in zip(jitted_fns, entry):
+        after = dispatch_cache_size(fn)
+        if after > max_executables:
+            offenders.append(
+                f"{_fn_name(fn)}: {after} executables "
+                f"(cap {max_executables}, {before} at entry)"
+            )
+    if offenders:
+        raise RecompileError(
+            "dispatch cache grew past the zero-recompile contract — "
+            "likely a host-built array or weak-typed scalar reaching a "
+            "jitted signature: " + "; ".join(offenders)
+        )
+
+
+def strict_mode_requested(env: Mapping[str, str] | None = None) -> bool:
+    """True when the ``REPRO_STRICT`` switch is set (and not "0")."""
+    env = os.environ if env is None else env
+    return env.get(STRICT_ENV, "") not in ("", "0")
+
+
+def enable_strict_mode(env: Mapping[str, str] | None = None) -> dict:
+    """Apply the strict jax debug config; returns the settings applied.
+
+    Safe to call more than once.  Callers gate on
+    :func:`strict_mode_requested`; the conftest ``strict_mode`` fixture
+    does both ends of that wiring.
+    """
+    env = os.environ if env is None else env
+    transfer = env.get(STRICT_TRANSFER_ENV, "log")
+    debug_nans = env.get(STRICT_NANS_ENV, "") not in ("", "0")
+    applied = {
+        "jax_numpy_rank_promotion": "raise",
+        "jax_transfer_guard": transfer,
+        "jax_check_tracer_leaks": True,
+        "jax_debug_nans": debug_nans,
+    }
+    for key, val in applied.items():
+        jax.config.update(key, val)
+    return applied

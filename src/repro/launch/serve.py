@@ -56,7 +56,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import ANNIndex, RetrievalSpec, get_distance, knn_scan, recall_at_k
+from repro.core import (ANNIndex, RetrievalSpec, dispatch_cache_size,
+                        get_distance, knn_scan, recall_at_k)
 from repro.core.metrics import speedup_model
 from repro.data.synthetic import lda_like_histograms, split_queries
 
@@ -576,8 +577,8 @@ def build_and_serve_sharded(*, distance: str = "kl", n_db: int = 4096,
         "eval_reduction": round(speedup_model(n_db, evals), 1),
         **latency_stats(lat),
         # the zero-recompile contract, made observable
-        "step_executables": sched._step._cache_size(),
-        "admit_executables": sched._admit._cache_size(),
+        "step_executables": dispatch_cache_size(sched._step),
+        "admit_executables": dispatch_cache_size(sched._admit),
     }
     if compare_replicated:
         idx = ANNIndex.build(X, dist, builder="nndescent", NN=NN,

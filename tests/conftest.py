@@ -29,6 +29,19 @@ except ImportError:
 import numpy as np
 import pytest
 
+# Strict-mode sanitizers (REPRO_STRICT=1, the nightly CI tier): rank-
+# promotion errors, transfer-guard logging (escalate with
+# REPRO_STRICT_TRANSFER=disallow), tracer-leak checking, and optional
+# debug-nans (REPRO_STRICT_NANS=1).  Applied at conftest import time so
+# every jax trace in the session — including module-level jit setup —
+# runs under the strict config; the `strict_mode` fixture exposes what
+# was applied.
+_STRICT_APPLIED = None
+if os.environ.get("REPRO_STRICT", "") not in ("", "0"):
+    from repro.core.runtime_checks import enable_strict_mode
+
+    _STRICT_APPLIED = enable_strict_mode()
+
 # Long-running modules excluded from the tier-1 CI job (`-m "not slow"`):
 # multi-device / system / elastic integration and the LM architecture smokes.
 _SLOW_MODULES = {
@@ -57,3 +70,10 @@ def _fixed_seeds():
     random.seed(0)
     np.random.seed(0)
     yield
+
+
+@pytest.fixture(scope="session")
+def strict_mode():
+    """The strict-mode jax config applied for this session, or None when
+    ``REPRO_STRICT`` is unset (tests can require/inspect it)."""
+    return _STRICT_APPLIED

@@ -296,6 +296,24 @@ def test_select_entries_medoid_first_unique(data):
     assert centrality[entries[0]] <= np.quantile(centrality, 0.01)
 
 
+def test_select_entries_is_fixed_shape_traceable(data):
+    """JL002 burn-in regression: entry selection no longer boolean-masks
+    the medoid out of the random draw (a data-dependent shape), so it
+    traces under eval_shape/jit; the stable-argsort replacement keeps the
+    old mask's element order, and with the medoid guaranteed drawn
+    (4*n_entries >= n makes the draw a permutation of all ids) it still
+    appears exactly once, in front."""
+    _, db = data
+    dist = get_distance("kl")
+    shape = jax.eval_shape(
+        lambda key: select_entries(dist, db, 4, key), jax.random.PRNGKey(3))
+    assert shape.shape == (4,)
+    small = db[:8]
+    entries = np.asarray(select_entries(dist, small, 4, jax.random.PRNGKey(5)))
+    assert len(entries) == 4
+    assert len(set(entries.tolist())) == 4
+
+
 def test_bitonic_merge_equals_stable_argsort():
     """The merge network reproduces a stable argsort of [beam | candidates]."""
     rng = np.random.RandomState(0)

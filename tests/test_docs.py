@@ -62,6 +62,19 @@ def test_checker_flags_stale_module_and_attr(fake_repo):
     assert _problems(fake_repo, "use `repro.core.spec.RenamedAway`")
 
 
+def test_known_artifacts_derived_from_bench_sources(fake_repo):
+    """The canonical artifact inventory is a glob over benchmarks/, not a
+    hand-maintained list: a new bench declaring its BENCH_*.json default
+    is known to the docs gate automatically."""
+    assert _problems(fake_repo, "see `BENCH_churn.json`")
+    (fake_repo / "benchmarks").mkdir()
+    (fake_repo / "benchmarks" / "bench_churn.py").write_text(
+        'def run(out_path: str = "BENCH_churn.json"):\n    pass\n')
+    assert not _problems(fake_repo, "see `BENCH_churn.json` / `BENCH_churn`")
+    # stems never declared by a bench are still flagged
+    assert _problems(fake_repo, "see `BENCH_other.json`")
+
+
 def test_checker_flags_missing_files_and_bench_artifacts(fake_repo):
     assert _problems(fake_repo, "run `scripts/nope.py`")
     assert _problems(fake_repo, "see `BENCH_missing.json`")

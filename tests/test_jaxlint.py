@@ -1,0 +1,428 @@
+"""jaxlint self-tests on synthetic trees (the ``tests/test_docs.py``
+pattern): every rule has a fixture that must flag and a clean twin that
+must not, plus suppression-comment, baseline-file and CLI exit-code
+semantics — so a refactor of the linter can't silently stop detecting a
+bug class.
+
+The repo itself must also lint clean against the committed baseline (the
+same check the CI lint job runs).
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+from jaxlint import fingerprints, lint_file, lint_tree, write_baseline  # noqa: E402
+from jaxlint import main as jaxlint_main  # noqa: E402
+
+
+def _lint(tmp_path, body, rel="src/repro/core/mod.py"):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(body)
+    return lint_file(p, tmp_path)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+def test_repo_lints_clean_against_committed_baseline():
+    assert jaxlint_main(["--root", str(ROOT)]) == 0
+
+
+# --------------------------------------------------------------------- JL001
+
+JL001_STATIC_BAD = """
+import jax
+from functools import partial
+
+@partial(jax.jit, static_argnames=("opts",))
+def f(x, opts=[1, 2]):
+    return x
+"""
+
+JL001_STATIC_CLEAN = """
+import jax
+from functools import partial
+
+@partial(jax.jit, static_argnames=("opts",))
+def f(x, opts=(1, 2)):
+    return x
+"""
+
+
+def test_jl001_flags_unhashable_static_default(tmp_path):
+    assert _rules(_lint(tmp_path, JL001_STATIC_BAD)) == ["JL001"]
+    assert not _lint(tmp_path, JL001_STATIC_CLEAN)
+
+
+JL001_CALLSITE_BAD = """
+import jax
+
+def run(x, cfg):
+    return x
+
+g = jax.jit(run, static_argnames=("cfg",))
+
+def drive(x):
+    return g(x, cfg=["a", "b"])
+"""
+
+JL001_CALLSITE_CLEAN = JL001_CALLSITE_BAD.replace('["a", "b"]', '("a", "b")')
+
+
+def test_jl001_flags_unhashable_literal_at_jit_callsite(tmp_path):
+    assert _rules(_lint(tmp_path, JL001_CALLSITE_BAD)) == ["JL001"]
+    assert not _lint(tmp_path, JL001_CALLSITE_CLEAN)
+
+
+# the PR 9 bug class, as a snippet: host-built reset state in a shard_map
+# module — the same hazard test_sharded_scheduler.py's injection test
+# proves recompile_guard catches at runtime
+JL001_PR9_BAD = """
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class Sched:
+    def _build(self, mesh, step):
+        self._step = jax.jit(shard_map(step, mesh=mesh, in_specs=(P("d"),),
+                                       out_specs=P("d")))
+        self.mesh = mesh
+
+    def reset(self):
+        self.state = jax.device_put(
+            jnp.full((8, 64), jnp.inf),
+            NamedSharding(self.mesh, P("d")))
+        self.scratch = jnp.zeros((8, 64))
+"""
+
+JL001_PR9_CLEAN = """
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+class Sched:
+    def _build(self, mesh, step, init):
+        self._step = jax.jit(shard_map(step, mesh=mesh, in_specs=(P("d"),),
+                                       out_specs=P("d")))
+        self._init = jax.jit(shard_map(init, mesh=mesh, in_specs=(),
+                                       out_specs=P("d")))
+
+    def reset(self):
+        self.state = self._init()
+"""
+
+
+def test_jl001_flags_pr9_style_host_built_shard_map_state(tmp_path):
+    findings = _lint(tmp_path, JL001_PR9_BAD)
+    assert _rules(findings) == ["JL001"]
+    # the device_put, its nested jnp.full, and the jnp.zeros attr state
+    assert len(findings) == 3
+    assert any("device_put" in f.message for f in findings)
+    assert not _lint(tmp_path, JL001_PR9_CLEAN)
+
+
+def test_jl001_host_arrays_only_flagged_in_shard_map_modules(tmp_path):
+    body = """
+import jax.numpy as jnp
+
+
+class Plain:
+    def reset(self):
+        self.state = jnp.zeros((8,))
+"""
+    assert not _lint(tmp_path, body)
+
+
+# --------------------------------------------------------------------- JL002
+
+JL002_BAD = """
+import jax.numpy as jnp
+
+
+def f(x, m, n):
+    a = jnp.nonzero(x)
+    b = jnp.unique(x)
+    c = jnp.where(x > 0)
+    d = x[x > 0]
+    e = x.reshape(jnp.sum(m), -1)
+    return a, b, c, d, e
+"""
+
+JL002_CLEAN = """
+import jax.numpy as jnp
+
+
+def f(x, m, n):
+    a = jnp.nonzero(x, size=8, fill_value=-1)
+    b = jnp.unique(x, size=8)
+    c = jnp.where(x > 0, x, 0.0)
+    d = jnp.where(x > 0, x, jnp.inf)
+    e = x.reshape(n, -1)
+    return a, b, c, d, e
+"""
+
+
+def test_jl002_flags_data_dependent_shapes_in_core(tmp_path):
+    findings = _lint(tmp_path, JL002_BAD)
+    assert _rules(findings) == ["JL002"]
+    assert len(findings) == 5
+    assert not _lint(tmp_path, JL002_CLEAN)
+
+
+def test_jl002_scoped_to_core_and_kernels(tmp_path):
+    # the same body outside src/repro/core + src/repro/kernels is host-side
+    # driver code where data-dependent shapes are legal
+    assert not _lint(tmp_path, JL002_BAD, rel="src/repro/launch/mod.py")
+    assert _rules(_lint(tmp_path, JL002_BAD,
+                        rel="src/repro/kernels/mod.py")) == ["JL002"]
+
+
+# --------------------------------------------------------------------- JL003
+
+JL003_BAD = """
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def tick_loop(xs, step):
+    out = []
+    for x in xs:
+        y = step(x)
+        out.append(np.asarray(y))
+        if float(jnp.sum(y)) > 0:
+            break
+        jax.block_until_ready(y)
+    return out
+"""
+
+JL003_TIMED_CLEAN = """
+import time
+import numpy as np
+
+
+def bench_loop(xs, step):
+    t0 = time.perf_counter()
+    for x in xs:
+        np.asarray(step(x))
+    return time.perf_counter() - t0
+"""
+
+JL003_NO_LOOP_CLEAN = """
+import numpy as np
+
+
+def retire(y):
+    return np.asarray(y)
+"""
+
+
+def test_jl003_flags_host_sync_in_loops(tmp_path):
+    findings = _lint(tmp_path, JL003_BAD)
+    assert _rules(findings) == ["JL003"]
+    assert len(findings) == 3
+    assert not _lint(tmp_path, JL003_NO_LOOP_CLEAN)
+
+
+def test_jl003_timed_regions_are_exempt(tmp_path):
+    assert not _lint(tmp_path, JL003_TIMED_CLEAN)
+
+
+# --------------------------------------------------------------------- JL004
+
+JL004_HALF_CONTRACT = """
+class HalfDistance:
+    def prep_scan(self, X):
+        return X
+
+    def prep_query(self, q):
+        return q
+
+    def pairwise(self, a, b):
+        return 0.0
+"""
+
+JL004_FULL_CONTRACT = """
+class FullDistance:
+    def matrix(self, X):
+        return X
+
+    def query_matrix(self, Q, X):
+        return X
+
+    def pairwise(self, a, b):
+        return 0.0
+
+    def pairwise_batch(self, A, B):
+        return A
+
+    def prep_scan(self, X):
+        return X
+
+    def prep_query(self, q):
+        return q
+
+    def score(self, rows, qc):
+        return rows
+"""
+
+
+def test_jl004_flags_partial_pair_distance_contract(tmp_path):
+    findings = _lint(tmp_path, JL004_HALF_CONTRACT)
+    assert _rules(findings) == ["JL004"]
+    assert "pairwise_batch" in findings[0].message
+    assert not _lint(tmp_path, JL004_FULL_CONTRACT)
+
+
+JL004_KINDS_BAD = """
+SYM_MODES = ("sym_min", "sym_avg")
+POLICY_KINDS = SYM_MODES + ("max", "blend", "mystery")
+
+
+class DistancePolicy:
+    def bind(self, base):
+        if self.kind == "max":
+            return base
+        if self.kind == "blend":
+            return base
+        raise ValueError(self.kind)
+"""
+
+JL004_KINDS_CLEAN = JL004_KINDS_BAD.replace(
+    'raise ValueError(self.kind)',
+    'if self.kind == "mystery":\n            return base\n'
+    '        raise ValueError(self.kind)')
+
+
+def test_jl004_flags_unhandled_policy_kind(tmp_path):
+    findings = _lint(tmp_path, JL004_KINDS_BAD)
+    assert _rules(findings) == ["JL004"]
+    assert "mystery" in findings[0].message
+    assert not _lint(tmp_path, JL004_KINDS_CLEAN)
+
+
+# --------------------------------------------------------------------- JL005
+
+JL005_BAD = """
+import jax
+
+
+def step(x, lr):
+    return x * lr
+
+
+step_j = jax.jit(step)
+
+
+def drive(x):
+    return step_j(x, 0.5)
+"""
+
+JL005_CLEAN = """
+import jax
+import jax.numpy as jnp
+
+
+def step(x, lr):
+    return x * lr
+
+
+step_j = jax.jit(step)
+decay_j = jax.jit(step, static_argnames=("lr",))
+
+
+def drive(x):
+    a = step_j(x, jnp.float32(0.5))
+    return decay_j(a, lr=0.5)
+"""
+
+
+def test_jl005_flags_weak_scalar_to_jitted_fn(tmp_path):
+    findings = _lint(tmp_path, JL005_BAD)
+    assert _rules(findings) == ["JL005"]
+    # wrapped scalars and scalars bound to STATIC params are both fine
+    assert not _lint(tmp_path, JL005_CLEAN)
+
+
+# --------------------------------------------- suppression + baseline + CLI
+
+
+def test_inline_suppression_requires_matching_rule_id(tmp_path):
+    line = "    a = jnp.nonzero(x)"
+    bad = f"import jax.numpy as jnp\n\n\ndef f(x):\n{line}\n    return a\n"
+    same_line = bad.replace(line, line + "  # jaxlint: disable=JL002 (why)")
+    above = bad.replace(line, "    # jaxlint: disable=JL002\n" + line)
+    wrong_rule = bad.replace(line, line + "  # jaxlint: disable=JL003")
+    no_rule = bad.replace(line, line + "  # jaxlint: disable=")
+    assert _rules(_lint(tmp_path, bad)) == ["JL002"]
+    assert not _lint(tmp_path, same_line)
+    assert not _lint(tmp_path, above)
+    assert _rules(_lint(tmp_path, wrong_rule)) == ["JL002"]
+    assert _rules(_lint(tmp_path, no_rule)) == ["JL002"]
+
+
+@pytest.fixture()
+def fake_tree(tmp_path):
+    core = tmp_path / "src" / "repro" / "core"
+    core.mkdir(parents=True)
+    (core / "a.py").write_text(
+        "import jax.numpy as jnp\n\n\ndef f(x):\n    return jnp.nonzero(x)\n")
+    return tmp_path
+
+
+def test_baseline_accepts_old_debt_but_not_new_findings(fake_tree):
+    bl = fake_tree / "bl.json"
+    argv = ["src", "--root", str(fake_tree), "--baseline", str(bl)]
+    assert jaxlint_main(argv) == 1  # no baseline yet: finding is new
+    assert jaxlint_main(argv + ["--update-baseline"]) == 0
+    assert jaxlint_main(argv) == 0  # baselined debt passes
+    # baseline survives line moves (fingerprints are line-insensitive)
+    a = fake_tree / "src" / "repro" / "core" / "a.py"
+    a.write_text("import jax.numpy as jnp\n\n# moved\n\n"
+                 "def f(x):\n    return jnp.nonzero(x)\n")
+    assert jaxlint_main(argv) == 0
+    # a NEW finding still fails even with the old one baselined
+    a.write_text(a.read_text() + "\n\ndef g(x):\n    return x[x > 0]\n")
+    assert jaxlint_main(argv) == 1
+
+
+def test_update_baseline_writes_fingerprints(fake_tree):
+    bl = fake_tree / "bl.json"
+    findings = lint_tree(fake_tree, ("src",))
+    write_baseline(bl, findings)
+    data = json.loads(bl.read_text())
+    assert len(data["findings"]) == 1
+    entry = data["findings"][0]
+    assert entry["rule"] == "JL002"
+    assert entry["fingerprint"] in fingerprints(findings)
+
+
+def test_cli_exit_codes_and_report(fake_tree):
+    report = fake_tree / "report.json"
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "jaxlint"), "src",
+         "--root", str(fake_tree), "--baseline", str(fake_tree / "bl.json"),
+         "--report", str(report)],
+        capture_output=True, text=True)
+    assert r.returncode == 1 and "JL002" in r.stderr
+    payload = json.loads(report.read_text())
+    assert payload["total"] == 1 and len(payload["new"]) == 1
+    (fake_tree / "src" / "repro" / "core" / "a.py").write_text("x = 1\n")
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "jaxlint"), "src",
+         "--root", str(fake_tree), "--baseline", str(fake_tree / "bl.json")],
+        capture_output=True, text=True)
+    assert r.returncode == 0 and "clean" in r.stdout

@@ -169,6 +169,35 @@ def test_multiwave_insert_after_wipe_stays_connected(data):
     np.testing.assert_array_equal(np.asarray(ids)[:, 0], back)
 
 
+def test_insert_hoists_entry_liveness_check(data, monkeypatch):
+    """JL003 burn-in regression: the per-wave host sync in insert() is
+    hoisted — a steady-state multi-wave insert reads entry liveness exactly
+    ONCE, and the delete-all recovery path re-checks only until an alive
+    entry is adopted (pre-loop + wave-1 no-op refresh + wave-2 adoption)."""
+    _, db, X_new = data
+    dist = get_distance("kl")
+    idx = ANNIndex.build(db[:100], dist, capacity=300,
+                         key=jax.random.PRNGKey(8), **{**BUILD, "wave": 16})
+    calls = {"n": 0}
+    orig = OnlineIndex._entries_alive
+
+    def counting(self):
+        calls["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(OnlineIndex, "_entries_alive", counting)
+    first = idx.insert(X_new[:64])  # 4 waves of 16, entries alive throughout
+    assert calls["n"] == 1, calls["n"]
+
+    idx.delete(np.concatenate([np.arange(100), first]))
+    calls["n"] = 0
+    back = idx.insert(X_new[64:])  # 41 points: 3 waves into a wiped index
+    assert calls["n"] == 3, calls["n"]
+    _, ids, _, _ = idx.search(idx.online.X[jnp.asarray(back)], k=1,
+                              ef_search=48)
+    np.testing.assert_array_equal(np.asarray(ids)[:, 0], back)
+
+
 def test_sustained_churn_at_constant_capacity(data):
     """ISSUE-4 satellite: +N/-N churn with ZERO capacity slack — tombstoned
     slots are recycled through the free list before the suffix grows, so

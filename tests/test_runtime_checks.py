@@ -1,0 +1,118 @@
+"""runtime_checks: recompile_guard semantics + strict-mode wiring.
+
+The full-system demonstration (host-built state tripping the guard on the
+sharded scheduler under 8 forced devices) lives in
+``tests/test_sharded_scheduler.py``; these are the unit-level contracts.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (RecompileError, dispatch_cache_size,
+                        recompile_guard, strict_mode_requested)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fresh_jit():
+    return jax.jit(lambda x: x * 2)
+
+
+def test_guard_passes_on_stable_cache():
+    f = _fresh_jit()
+    x = jnp.ones((4,))
+    f(x)  # steady state established before the guard
+    with recompile_guard(f):
+        f(x)
+        f(x + 1)  # same shape/dtype: same executable
+    assert dispatch_cache_size(f) == 1
+
+
+def test_guard_allows_first_compile_inside_block():
+    f = _fresh_jit()
+    with recompile_guard(f):
+        f(jnp.ones((4,)))
+
+
+def test_guard_raises_on_cache_growth_and_names_offender():
+    f = jax.jit(lambda x: x * 2)
+    f.__wrapped__.__name__ = "step"
+    f(jnp.ones((4,)))
+    with pytest.raises(RecompileError) as ei:
+        with recompile_guard(f):
+            f(jnp.ones((4, 2)))  # new shape: second executable
+    msg = str(ei.value)
+    assert "dispatch cache grew" in msg
+    assert "2 executables" in msg and "1 at entry" in msg
+
+
+def test_guard_max_executables_raises_the_cap():
+    f = _fresh_jit()
+    with recompile_guard(f, max_executables=2):
+        f(jnp.ones((4,)))
+        f(jnp.ones((4, 2)))
+    with pytest.raises(RecompileError):
+        with recompile_guard(f, max_executables=2):
+            f(jnp.ones((4, 2, 2)))
+
+
+def test_guard_checks_every_fn():
+    f, g = _fresh_jit(), _fresh_jit()
+    f(jnp.ones((4,)))
+    with pytest.raises(RecompileError):
+        with recompile_guard(f, g):
+            g(jnp.ones((3,)))
+            g(jnp.ones((5,)))
+
+
+def test_guard_rejects_non_jitted_and_empty():
+    with pytest.raises(TypeError):
+        dispatch_cache_size(lambda x: x)
+    with pytest.raises(TypeError):
+        with recompile_guard():
+            pass
+
+
+def test_strict_mode_requested_env_switch():
+    assert not strict_mode_requested({})
+    assert not strict_mode_requested({"REPRO_STRICT": ""})
+    assert not strict_mode_requested({"REPRO_STRICT": "0"})
+    assert strict_mode_requested({"REPRO_STRICT": "1"})
+
+
+def test_enable_strict_mode_applies_jax_config():
+    """Subprocess (global jax config must not leak into this session):
+    strict mode raises on implicit rank promotion and honours the
+    transfer/nans sub-switches."""
+    body = """
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+from repro.core.runtime_checks import enable_strict_mode
+import jax.numpy as jnp
+
+applied = enable_strict_mode({"REPRO_STRICT_TRANSFER": "log"})
+assert applied["jax_numpy_rank_promotion"] == "raise", applied
+assert applied["jax_transfer_guard"] == "log", applied
+assert applied["jax_check_tracer_leaks"] is True, applied
+assert applied["jax_debug_nans"] is False, applied
+try:
+    jnp.ones((3, 4)) + jnp.ones((4,))
+except (TypeError, ValueError):
+    pass
+else:
+    raise SystemExit("rank promotion did not raise under strict mode")
+applied = enable_strict_mode({"REPRO_STRICT_NANS": "1"})
+assert applied["jax_debug_nans"] is True, applied
+print("strict mode OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", body], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "strict mode OK" in proc.stdout

@@ -123,18 +123,52 @@ def test_sharded_scheduler_never_recompiles_and_non_divisible():
     """Steady-state serving keeps ONE executable per jitted path, including
     on a non-divisible corpus (padded shards), across two full streams."""
     run_script(COMMON + """
+from repro.core import recompile_guard
 Xn = lda_like_histograms(jax.random.PRNGKey(2), 509, 16)
 nbrs_n = build_local_subgraphs(mesh, dist, Xn, NN=10, nnd_iters=6)
 sched = ShardedSlotScheduler(mesh, dist, Xn, neighbors=nbrs_n, slots=4,
                              ef=64, k=10)
-res = sched.run_stream(Q)
-ids = np.stack([r.ids for r in res])
+with recompile_guard(sched._step, sched._admit):
+    res = sched.run_stream(Q)
+    ids = np.stack([r.ids for r in res])
+    res2 = sched.run_stream(Q[::-1].copy())
 assert ids.max() < 509, f"padded id surfaced: {ids.max()}"
-res2 = sched.run_stream(Q[::-1].copy())
-assert sched._step._cache_size() == 1, sched._step._cache_size()
-assert sched._admit._cache_size() == 1, sched._admit._cache_size()
 _, true_ids = knn_scan(dist, Q, Xn, 10)
 r = recall_at_k(ids, np.asarray(true_ids))
 assert r >= 0.85, r
 print(f"zero-recompile + non-divisible serving OK r={r:.3f}")
+""")
+
+
+def test_recompile_guard_catches_host_built_reset_state():
+    """The acceptance demo for the PR 9 bug class: re-injecting a
+    host-built reset state (the pre-jit template path, exactly what the
+    first sharded-scheduler implementation served from) must trip
+    ``recompile_guard`` at runtime — the same hazard ``tools/jaxlint``
+    flags statically as JL001."""
+    run_script(COMMON + """
+from repro.core import RecompileError, recompile_guard
+sched = ShardedSlotScheduler(mesh, dist, X, neighbors=nbrs, slots=4, ef=64,
+                             k=10)
+res = sched.run_stream(Q)
+assert len(res) == Q.shape[0]
+# inject the bug: rebuild serving state host-side instead of through the
+# jitted _init that shares admit/step's out_specs
+init = sched._init
+del sched._init
+sched.reset()  # falls back to the host-built template path
+sched._init = init
+try:
+    with recompile_guard(sched._step, sched._admit):
+        sched.run_stream(Q)
+    raise SystemExit("recompile_guard did NOT trip on host-built state")
+except RecompileError as e:
+    assert "dispatch cache grew" in str(e), e
+# recovery: a jitted reset() restores the canonical shardings and the
+# steady-state contract holds again (caches hold the stale executable,
+# so the recovered state must stay within a one-extra-executable cap)
+sched.reset()
+with recompile_guard(sched._step, sched._admit, max_executables=2):
+    sched.run_stream(Q)
+print("recompile_guard injection demo OK")
 """)

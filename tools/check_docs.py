@@ -8,9 +8,10 @@ Checks, over every ``README.md`` and ``docs/*.md``:
     or directory (http(s)/mailto/#anchor targets are skipped, fragments
     stripped);
   * inline-code references to ``BENCH_*`` artifacts name a canonical
-    artifact (``KNOWN_ARTIFACTS`` — the set ``benchmarks/run.py``
-    produces; extend the list when adding a bench) or a committed file
-    (repo root or ``benchmarks/baselines/``);
+    artifact (derived from the ``BENCH_*.json`` literals declared in
+    ``benchmarks/bench_*.py`` sources plus ``EXTRA_ARTIFACTS``, so a new
+    bench is known automatically) or a committed file (repo root or
+    ``benchmarks/baselines/``);
   * inline-code path references (``benchmarks/compare_bench.py``,
     ``tests/test_spec.py::test_name``, ``launch/serve.py``) exist —
     resolved against the repo root, then ``src/``, then ``src/repro/``;
@@ -38,24 +39,29 @@ FENCE_RE = re.compile(r"^(```|~~~)")
 PATH_RE = re.compile(r"\.?[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|json|md|yml|toml)")
 MODULE_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
 BENCH_RE = re.compile(r"\bBENCH_[A-Za-z0-9_]+\b")
+BENCH_JSON_RE = re.compile(r"\bBENCH_[A-Za-z0-9_]+\.json\b")
 
 SKIP_SCHEMES = ("http://", "https://", "mailto:")
 
-# canonical bench artifacts (stem, no .json) produced by benchmarks/run.py.
-# Docs may cite any of these even before a freshly generated root copy is
-# committed; anything else must exist on disk (repo root or the quick
-# baselines).  New benches extend this list — no per-name special cases.
-KNOWN_ARTIFACTS = frozenset({
-    "BENCH_autotune",
-    "BENCH_beam_engine",
-    "BENCH_learned",
-    "BENCH_build_engine",
-    "BENCH_online",
-    "BENCH_overload",
-    "BENCH_serve",
-    "BENCH_sharded",
-    "BENCH_spec",
-})
+# Artifacts that no bench module declares (extension point; currently
+# empty).  The canonical inventory is DERIVED from the benchmarks tree —
+# every ``BENCH_*.json`` literal in a ``benchmarks/bench_*.py`` source —
+# so adding a bench can't silently skip the docs gate by forgetting to
+# extend a hand-maintained list.
+EXTRA_ARTIFACTS: frozenset[str] = frozenset()
+
+
+def known_artifacts(root: pathlib.Path) -> frozenset[str]:
+    """Canonical bench-artifact stems (no .json): the names declared in
+    ``benchmarks/bench_*.py`` sources plus ``EXTRA_ARTIFACTS``.  Docs may
+    cite any of these even before a freshly generated root copy is
+    committed; anything else must exist on disk (repo root or the quick
+    baselines)."""
+    names = set(EXTRA_ARTIFACTS)
+    for bench in sorted((root / "benchmarks").glob("bench_*.py")):
+        names.update(m.removesuffix(".json")
+                     for m in BENCH_JSON_RE.findall(bench.read_text()))
+    return frozenset(names)
 
 
 def _strip_fences(text: str) -> str:
@@ -82,8 +88,10 @@ def _module_file(root: pathlib.Path, dotted: str):
     return None, None
 
 
-def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+def check_file(md: pathlib.Path, root: pathlib.Path,
+               known: frozenset[str] | None = None) -> list[str]:
     problems = []
+    known = known_artifacts(root) if known is None else known
     rel = md.relative_to(root)
     text = _strip_fences(md.read_text())
 
@@ -123,7 +131,7 @@ def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
                     )
 
         for bench in BENCH_RE.findall(span):
-            if bench.removesuffix(".json") in KNOWN_ARTIFACTS:
+            if bench.removesuffix(".json") in known:
                 continue
             name = bench if bench.endswith(".json") else None
             hits = [
@@ -141,10 +149,11 @@ def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
 
 def check_docs(root: pathlib.Path) -> list[str]:
     files = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    known = known_artifacts(root)
     problems = []
     for md in files:
         if md.is_file():
-            problems.extend(check_file(md, root))
+            problems.extend(check_file(md, root, known))
     return problems
 
 

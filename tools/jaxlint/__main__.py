@@ -1,0 +1,11 @@
+"""Entry point so ``python tools/jaxlint`` works from the repo root."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from jaxlint import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())
